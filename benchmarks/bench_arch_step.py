@@ -1,0 +1,48 @@
+"""Per-architecture step microbenchmarks (the §VI-D summary analogue):
+one train step + one decode step per smoke config, single device."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import ARCHS, get_smoke_config
+from repro.models import build_model, split_tree
+
+B, S = 2, 64
+
+
+def run(archs=None):
+    for arch in archs or ARCHS:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
+        batch = {
+            "tokens": jnp.ones((B, S), jnp.int32),
+            "targets": jnp.ones((B, S), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((B, cfg.enc_frames, cfg.d_model),
+                                        cfg.dtype)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros((B, cfg.num_patches, cfg.vit_dim),
+                                              cfg.dtype)
+
+        def loss_fn(p, b):
+            return model.loss(p, b)[0]
+
+        grad_fn = jax.jit(jax.grad(loss_fn))
+        us_train = time_fn(grad_fn, params, batch)
+        emit(f"train_step_{arch}", us_train,
+             f"tok_per_s={B * S / (us_train / 1e6):.0f}")
+
+        cache = model.init_cache(B, S)
+        step = jax.jit(model.decode_step)
+        tok = jnp.ones((B, 1), jnp.int32)
+        us_dec = time_fn(step, params, cache, tok)
+        emit(f"decode_step_{arch}", us_dec,
+             f"tok_per_s={B / (us_dec / 1e6):.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Paper Table III + Fig. 12/13 — conv2d chain-count trade-off.
+
+The paper splits 256 PEs into k independent chains: more chains = shorter
+transients (fill/drain) + contained stalls, but chain heads become mover
+PEs (lost compute). The pipeline-parallel analogue (DESIGN.md §5): stages =
+chain PEs, microbatches = the pulse, bubble = transient.
+
+For each chain count we run the queue-based pipeline (core.pipeline) over a
+stage axis and report: wall time, the analytic bubble fraction (the paper's
+end-to-end vs steady-state utilization gap), and modeled energy. The
+baseline is the halo conv2d (all PEs compute, XLA-scheduled).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks.common import emit, time_fn
+from repro.core import energy
+from repro.core.halo import conv2d_3x3_local, conv2d_ref, conv2d_systolic
+from repro.core.pipeline import bubble_fraction, pipelined
+from repro.launch.mesh import make_mesh
+
+
+def run(h: int = 256, w: int = 128, n_dev: int = 8, n_micro: int = 16):
+    mesh = make_mesh((n_dev,), ("pe",))
+    key = jax.random.PRNGKey(0)
+    kern = jax.random.normal(jax.random.PRNGKey(1), (3, 3), jnp.float32)
+    results = {}
+
+    # baseline: halo conv across all PEs (steady-state reference)
+    x = jax.device_put(jax.random.normal(key, (h, w), jnp.float32),
+                       NamedSharding(mesh, P("pe", None)))
+    base_fn = jax.jit(lambda x, k: conv2d_systolic(x, k, mesh, "pe", "qlr"))
+    base_fn(x, kern)
+    us = time_fn(base_fn, x, kern)
+    emit("conv2d_chains_baseline", us, "bubble=0.00;chains=all-compute")
+    results["baseline"] = us
+
+    # pipelined chains: stage i convolves its row band of each microbatch
+    # image strip; k chains = k independent pipelines of depth n_dev/k
+    rows_per_mb = h // n_micro
+    xs = jax.random.normal(key, (n_micro, rows_per_mb, w), jnp.float32)
+
+    def stage_fn(_p, x_mb, stage_idx):
+        # each stage applies the stationary kernel to its microbatch strip
+        # (halo-free per-strip conv: the chain transports strips onward)
+        padded = jnp.pad(x_mb, ((1, 1), (0, 0)))
+        return conv2d_3x3_local(padded, kern)
+
+    for n_chains in (1, 2, 4, 8):
+        n_stages = n_dev // n_chains
+        if n_stages < 1:
+            continue
+        frac = bubble_fraction(n_stages, n_micro // n_chains)
+        if n_stages == 1:
+            # degenerate chain = data parallel; measure baseline-style
+            emit(f"conv2d_chains_{n_chains}", results["baseline"],
+                 f"bubble={frac:.3f};stages=1;note=data-parallel-limit")
+            continue
+        fn = pipelined(stage_fn, mesh, "pe", n_micro, mode="qlr",
+                       n_chains=n_chains)
+        params = jnp.zeros((n_stages, 1))
+        jfn = jax.jit(lambda p, v: fn(p, v))
+        jfn(params, xs)
+        us = time_fn(jfn, params, xs)
+        # modeled energy: mover fraction = chains/n_dev lost compute
+        flops = 2 * 9 * h * w
+        link_bytes = 4 * (n_stages - 1) * n_micro * rows_per_mb * w / n_dev
+        rep = energy.account(energy.MEMPOOL, flops=flops,
+                             link_bytes=link_bytes,
+                             remote_bytes=4 * 2 * h * w)
+        results[n_chains] = us
+        emit(f"conv2d_chains_{n_chains}", us,
+             f"bubble={frac:.3f};stages={n_stages};"
+             f"modeled_gops_w={rep.gops_per_w:.0f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: wall timing, HLO op counting (the
+"instruction count" analogue of the paper's control-overhead analysis), and
+CSV emission in the required ``name,us_per_call,derived`` format."""
+from __future__ import annotations
+
+import re
+import time
+from typing import Callable
+
+import jax
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Best-of wall time per call in microseconds (post-compile)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def hlo_counts(fn: Callable, *args) -> dict:
+    """Static op counts of the compiled module: total ops (instruction-count
+    analogue) and collectives by kind."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    text = compiled.as_text()
+    total = sum(1 for line in text.splitlines()
+                if "=" in line and line.startswith("  "))
+    colls: dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(text):
+        colls[m.group(1)] = colls.get(m.group(1), 0) + 1
+    return {"total_ops": total, "collectives": colls,
+            "n_collectives": sum(colls.values())}
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

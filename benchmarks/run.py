@@ -1,0 +1,58 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure.
+
+Each benchmark prints ``name,us_per_call,derived`` CSV rows. Multi-PE
+benchmarks (the paper's systolic measurements fundamentally need multiple
+PEs) run in subprocesses with 16 fake CPU devices; the per-arch step bench
+runs with the default single device. This file itself never imports jax, so
+the device-count env never leaks.
+
+  PYTHONPATH=src python -m benchmarks.run           # full suite
+  PYTHONPATH=src python -m benchmarks.run --only cfft
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+BENCHES = {
+    # module -> n fake devices (0 = default single device)
+    "benchmarks.bench_link_impl": 16,        # paper Fig. 8/9
+    "benchmarks.bench_matmul_variants": 16,  # paper Table II, Fig. 10/11
+    "benchmarks.bench_conv2d_chains": 16,    # paper Table III, Fig. 12/13
+    "benchmarks.bench_cfft": 16,             # paper Fig. 14/15
+    "benchmarks.bench_arch_step": 0,         # §VI-D per-arch summary
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="substring filter on benchmark module names")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod, n_dev in BENCHES.items():
+        if args.only and args.only not in mod:
+            continue
+        env = dict(os.environ)
+        if n_dev:
+            env["XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count={n_dev}")
+        print(f"# {mod} (devices={n_dev or 1})", flush=True)
+        proc = subprocess.run(
+            [sys.executable, "-m", mod], env=env, text=True,
+            capture_output=True)
+        sys.stdout.write(proc.stdout)
+        if proc.returncode != 0:
+            failures.append(mod)
+            sys.stderr.write(proc.stderr[-2000:])
+            print(f"# {mod} FAILED rc={proc.returncode}", flush=True)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+# The paper's primary contribution, adapted to JAX/TPU (see DESIGN.md §2):
+# systolic topologies + queue links over mesh axes, ring collective matmuls
+# with sw/xqueue/qlr link modes, queue-based pipeline parallelism, halo
+# exchange, the stage-pipelined radix-4 FFT, and the modeled energy accounts.
+from repro.core import (
+    collective_matmul,
+    energy,
+    fft,
+    halo,
+    pipeline,
+    queues,
+    topology,
+)

@@ -1,0 +1,321 @@
+"""Systolic (ring) collective matmuls — the paper's hybrid execution model
+applied to TPU tensor parallelism.
+
+The mapping (DESIGN.md §2): MemPool's PEs stream operands through memory-
+mapped queues while fetching other operands from shared memory. On a TPU
+mesh, the *streamed* operand rides a ppermute ring (systolic links over
+ICI), while the *resident* operand is all-gathered (the shared-memory
+multicast). Output-stationary accumulation lives in each chip's output
+shard, and the final sharded write-back is the gather collective.
+
+Three link modes (cf. core/queues.py): sw / xqueue / qlr, plus ``baseline``
+(plain all-gather + matmul: the pure shared-memory MemPool baseline).
+
+Entry points:
+  ring_ag_matmul    — all-gather-and-matmul as a ring stream; supports
+                      multiple weights sharing one operand stream (the
+                      paper's data-reuse: one queue feeds several MACs).
+  ring_matmul_rs    — matmul + reduce-scatter as a ring of traveling
+                      accumulators (output flows to its owner).
+  cannon_matmul     — 2-D output-stationary systolic matmul (Cannon's
+                      algorithm) on an RxC folding of one mesh axis: the
+                      paper's pure-systolic matmul_QLR,1-4.
+  systolic_ffn      — SwiGLU FFN with AG-ring in, RS-ring out; wired into
+                      transformer blocks when cfg.systolic_mode != baseline.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import queues
+from repro.core.topology import Topology, ring
+
+# ---------------------------------------------------------------------------
+# shard_map-local primitives
+# ---------------------------------------------------------------------------
+
+
+def ring_ag_matmul(x_local, ws: Sequence[jax.Array], topo: Topology,
+                   mode: str = "qlr"):
+    """All-gather(x) @ w_i for each w_i, streamed around a ring.
+
+    x_local: [..., s_local, d] (this device's shard of the streamed operand)
+    ws:      list of [d, f_local] resident weights (the multicast operand)
+    Returns: list of [..., n*s_local, f_local] full outputs.
+
+    baseline: one all-gather + matmuls (shared-memory model).
+    ring modes: n hops; at hop t the buffer holds shard (my - t) mod n, and
+    its partial products are written into the output at that offset —
+    output-stationary accumulation with the operand flowing through.
+    """
+    n = topo.size
+    s_local = x_local.shape[-2]
+    if mode == "baseline":
+        xs = jax.lax.all_gather(x_local, topo.axis, axis=x_local.ndim - 2,
+                                tiled=True)
+        return [jnp.einsum("...sd,df->...sf", xs, w) for w in ws]
+
+    my = jax.lax.axis_index(topo.axis)
+    # src_table[d, t] = which shard device d holds after t hops of the
+    # (single-cycle) topology — supports non-contiguous rings (snake folds)
+    src_table = jnp.asarray(_source_table(topo))
+    outs = [
+        jnp.zeros(x_local.shape[:-2] + (n * s_local, w.shape[-1]),
+                  jnp.promote_types(x_local.dtype, w.dtype))
+        for w in ws
+    ]
+
+    def consume(state, buf, t):
+        src = src_table[my, t]
+        offset = src * s_local
+        new_state = []
+        for o, w in zip(state, ws):
+            part = jnp.einsum("...sd,df->...sf", buf, w)
+            new_state.append(jax.lax.dynamic_update_slice_in_dim(
+                o, part.astype(o.dtype), offset, axis=o.ndim - 2))
+        return new_state
+
+    state, _ = queues.stream(topo, x_local, n, consume, outs, mode)
+    return state
+
+
+def _source_table(topo: Topology):
+    """[n, n] table: entry (d, t) = origin shard of the buffer device d
+    holds after t hops. Requires the topology to be one n-cycle."""
+    import numpy as np
+    nxt = dict(topo.perm)
+    assert len(nxt) == topo.size, "topology must be a single full cycle"
+    table = np.zeros((topo.size, topo.size), np.int32)
+    table[:, 0] = np.arange(topo.size)
+    for t in range(1, topo.size):
+        for s, d in topo.perm:
+            table[d, t] = table[s, t - 1]
+    return table
+
+
+def ring_matmul_rs(x, w, topo: Topology, mode: str = "qlr"):
+    """(x @ w) reduce-scattered over the sequence dim, as a ring of
+    traveling accumulators.
+
+    x: [..., S, f_local], w: [f_local, d]. Returns [..., S/n, d] (chunk
+    ``my`` fully reduced over the ring).
+
+    Chunk schedule: device d computes chunk (d + n - 1 - t) mod n at hop t,
+    so each accumulator arrives at its owner exactly when the last partial
+    joins (the systolic pulse).
+    """
+    n = topo.size
+    s = x.shape[-2]
+    assert s % n == 0, (s, n)
+    s_local = s // n
+    if mode == "baseline":
+        y = jnp.einsum("...sf,fd->...sd", x, w)
+        return jax.lax.psum_scatter(y, topo.axis, scatter_dimension=y.ndim - 2,
+                                    tiled=True)
+
+    my = jax.lax.axis_index(topo.axis)
+
+    def part(t, x_src):
+        c = jnp.mod(my + n - 1 - t, n)
+        xc = jax.lax.dynamic_slice_in_dim(x_src, c * s_local, s_local,
+                                          axis=x_src.ndim - 2)
+        return jnp.einsum("...sf,fd->...sd", xc, w)
+
+    acc = part(0, x)
+    for t in range(1, n):
+        moved = queues.hop(topo, acc, mode)
+        if mode in ("sw", "xqueue"):
+            # serialize: the next partial waits for the queue transfer
+            x_tied, moved = jax.lax.optimization_barrier((x, moved))
+            acc = moved + part(t, x_tied)
+        else:
+            acc = moved + part(t, x)  # qlr: hop overlaps the partial matmul
+    return acc
+
+
+def cannon_matmul(a_local, b_local, row_topo: Topology, col_topo: Topology,
+                  rows: int, cols: int, mode: str = "qlr",
+                  preskewed: bool = False):
+    """2-D output-stationary systolic matmul (Cannon) on an RxC grid folded
+    from one mesh axis. Device (r,c) ends with C tile = sum_k A[r,k]B[k,c].
+
+    a_local: [m_loc, k_loc] — A tile; b_local: [k_loc, n_loc] — B tile.
+    Requires rows == cols (square torus) for the classic skew schedule.
+    """
+    assert rows == cols, "Cannon requires a square grid"
+    n = rows
+    my = jax.lax.axis_index(row_topo.axis)
+    r, c = my // cols, my % cols
+
+    if not preskewed:
+        # initial skew: A row r shifts left r times; B col c shifts up c times
+        def skew(x, topo, times):
+            def body(i, v):
+                return queues.hop(topo, v, "qlr")
+            return jax.lax.fori_loop(0, times, body, x)
+        a_local = _masked_rot(a_local, row_topo, r, n)
+        b_local = _masked_rot(b_local, col_topo, c, n)
+
+    acc = jnp.zeros((a_local.shape[0], b_local.shape[1]),
+                    jnp.promote_types(a_local.dtype, b_local.dtype))
+    for t in range(n):
+        acc = acc + a_local @ b_local
+        if t < n - 1:
+            if mode in ("sw", "xqueue"):
+                acc, a_local, b_local = jax.lax.optimization_barrier(
+                    (acc, a_local, b_local))
+            a_local = queues.hop(row_topo, a_local, mode)
+            b_local = queues.hop(col_topo, b_local, mode)
+    return acc
+
+
+def _masked_rot(x, topo: Topology, times, n: int):
+    """Rotate ``x`` ``times`` hops (traced count) via n-step masked loop."""
+    def body(i, v):
+        moved = queues.hop(topo, v, "qlr")
+        return jnp.where(i < times, moved, v)
+    return jax.lax.fori_loop(0, n - 1, body, x)
+
+
+# ---------------------------------------------------------------------------
+# jit-level wrapper: systolic SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def ffn_applicable(x, d_ff: int, mesh: Mesh) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes.get("model", 0)
+    if not n:
+        return False
+    b, s, d = x.shape
+    bsz = 1
+    for a in _batch_axes(mesh):
+        bsz *= sizes[a]
+    return s % n == 0 and d_ff % n == 0 and b % bsz == 0 and d % max(
+        sizes.get("data", 1), 1) == 0
+
+
+def attn_applicable(x, num_heads: int, num_kv_heads: int, head_dim: int,
+                    mesh: Mesh) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes.get("model", 0)
+    if not n:
+        return False
+    b, s, d = x.shape
+    bsz = 1
+    for a in _batch_axes(mesh):
+        bsz *= sizes[a]
+    return (s % n == 0 and num_heads % n == 0 and num_kv_heads % n == 0
+            and b % bsz == 0 and d % max(sizes.get("data", 1), 1) == 0)
+
+
+def systolic_qkv(x, wq, wk, wv, mesh: Mesh, mode: str = "qlr"):
+    """QKV projections as ONE systolic ring: the x stream feeds three weight
+    sinks (the paper's data-reuse degree — one queue, several MACs).
+
+    x: [B,S,D] seq-sharded over 'model'; w*: [D, H*, hd] head-sharded.
+    Returns q, k, v: [B, S, H*_local... ] with heads sharded over 'model'
+    (full sequence, the layout attention math wants).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes["model"]
+    batch = _batch_axes(mesh)
+    topo = ring("model", n)
+    x_spec = P(batch if batch else None, "model", None)
+    w_specs = [P("data" if "data" in sizes else None, "model", None)] * 3
+    out_specs = tuple(P(batch if batch else None, None, "model", None)
+                      for _ in range(3))
+
+    def body(x_l, wq_l, wk_l, wv_l):
+        ws = []
+        for w_l in (wq_l, wk_l, wv_l):
+            if "data" in sizes:
+                w_l = jax.lax.all_gather(w_l, "data", axis=0, tiled=True)
+            ws.append(w_l.reshape(w_l.shape[0], -1))
+        q2, k2, v2 = ring_ag_matmul(x_l, ws, topo, mode)
+        def unflat(y2, w_l):
+            b_, s_ = y2.shape[0], y2.shape[1]
+            return y2.reshape(b_, s_, w_l.shape[1], w_l.shape[2])
+        return unflat(q2, wq_l), unflat(k2, wk_l), unflat(v2, wv_l)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(x_spec, *w_specs), out_specs=out_specs,
+                       check_vma=False)
+    return fn(x, wq, wk, wv)
+
+
+def systolic_out_proj(attn_out, wo, mesh: Mesh, mode: str = "qlr"):
+    """Attention output projection with a reduce-scatter ring: partial sums
+    over the head shards travel to their sequence-shard owners.
+
+    attn_out: [B,S,H,hd] heads-sharded; wo: [H, hd, D]. Returns [B,S,D]
+    seq-sharded over 'model'.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes["model"]
+    batch = _batch_axes(mesh)
+    topo = ring("model", n)
+    x_spec = P(batch if batch else None, None, "model", None)
+    w_spec = P("model", None, "data" if "data" in sizes else None)
+    out_spec = P(batch if batch else None, "model", None)
+
+    def body(o_l, wo_l):
+        if "data" in sizes:
+            wo_l = jax.lax.all_gather(wo_l, "data", axis=2, tiled=True)
+        b_, s_, hl, hd = o_l.shape
+        o2 = o_l.reshape(b_, s_, hl * hd)
+        w2 = wo_l.reshape(hl * hd, wo_l.shape[2])
+        return ring_matmul_rs(o2, w2, topo, mode)
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(x_spec, w_spec),
+                       out_specs=out_spec, check_vma=False)
+    return fn(attn_out, wo)
+
+
+def systolic_ffn(x, w_gate, w_up, w_down, mesh: Mesh, mode: str = "qlr"):
+    """SwiGLU FFN with systolic sequence-parallel rings over 'model':
+
+      x (seq-sharded) --AG-ring--> [gate|up] (one stream, two weight sinks:
+      the paper's data-reuse) --silu*-- h --RS-ring--> y (seq-sharded)
+
+    Weights are FSDP-sharded over 'data' and fetched by all-gather — the
+    shared-memory multicast of the hybrid model. Falls back to the caller's
+    baseline path when shapes don't divide (checked via ffn_applicable).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes["model"]
+    batch = _batch_axes(mesh)
+    topo = ring("model", n)
+
+    x_spec = P(batch if batch else None, "model", None)
+    wg_spec = P("data", "model") if "data" in sizes else P(None, "model")
+    wd_spec = P("model", "data") if "data" in sizes else P("model", None)
+    out_spec = P(batch if batch else None, "model", None)
+
+    def body(x_l, wg_l, wu_l, wd_l):
+        if "data" in sizes:
+            wg = jax.lax.all_gather(wg_l, "data", axis=0, tiled=True)
+            wu = jax.lax.all_gather(wu_l, "data", axis=0, tiled=True)
+            wd = jax.lax.all_gather(wd_l, "data", axis=1, tiled=True)
+        else:
+            wg, wu, wd = wg_l, wu_l, wd_l
+        gate, up = ring_ag_matmul(x_l, [wg, wu], topo, mode)
+        h = jax.nn.silu(gate) * up                    # [B_l, S, f_local]
+        return ring_matmul_rs(h, wd, topo, mode)      # [B_l, s_local, d]
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, wg_spec, wg_spec, wd_spec),
+        out_specs=out_spec,
+        check_vma=False,
+    )
+    return fn(x, w_gate, w_up, w_down)

@@ -1,0 +1,87 @@
+"""Modeled energy accounting (no power can be measured in this container).
+
+Two calibrations:
+
+* ``MEMPOOL`` — reproduces the paper's *relative* energy story on its own
+  terms: 32-bit ops, local (same-tile) vs remote (cross-tile) memory access
+  energy with the paper's measured 2x ratio, interconnect share ~30% of
+  group power for memory-bound kernels [10]. Used by the DSP benchmarks to
+  produce GOPS/W-style figures comparable to the paper's Figs. 9-15.
+* ``TPU_V5E`` — order-of-magnitude public figures for a modern DSA (pJ/op,
+  pJ/byte for HBM and ICI), used to annotate the roofline report.
+
+All outputs are MODELED values, labeled as such wherever printed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class EnergyModel:
+    name: str
+    pj_per_flop: float          # functional unit energy per op
+    pj_per_byte_local: float    # same-tile SPM / VMEM access
+    pj_per_byte_remote: float   # cross-tile / HBM access
+    pj_per_byte_link: float     # systolic link / ICI hop
+    pj_per_instr_overhead: float  # per-instruction control overhead (fetch/decode)
+
+
+# Calibrated so the shared-memory matmul baseline lands near the paper's
+# measured ~52% of power in the PEs and ~30% in the interconnect, and the
+# QLR variants recover the reported 60-64% energy-efficiency gains.
+MEMPOOL = EnergyModel(
+    name="mempool-22fdx-32b",
+    pj_per_flop=1.0,
+    pj_per_byte_local=0.25,
+    pj_per_byte_remote=0.5,      # paper: remote ~2x local energy
+    pj_per_byte_link=0.25,       # queues live in local banks
+    pj_per_instr_overhead=0.6,   # Snitch fetch/decode/issue share
+)
+
+TPU_V5E = EnergyModel(
+    name="tpu-v5e-bf16",
+    pj_per_flop=0.15,
+    pj_per_byte_local=0.2,       # VMEM
+    pj_per_byte_remote=4.0,      # HBM
+    pj_per_byte_link=10.0,       # ICI serdes
+    pj_per_instr_overhead=0.0,   # amortized in a DSA
+)
+
+
+@dataclass
+class EnergyReport:
+    total_pj: float
+    pe_pj: float                # functional-unit (compute) energy
+    mem_pj: float
+    link_pj: float
+    overhead_pj: float
+    flops: float
+
+    @property
+    def pe_fraction(self) -> float:
+        return self.pe_pj / max(self.total_pj, 1e-12)
+
+    @property
+    def gops_per_w(self) -> float:
+        """ops / (pJ * 1e-12 J) => GOPS/W = flops / (total_pj * 1e-3)."""
+        return self.flops / max(self.total_pj, 1e-12) * 1e3
+
+    def summary(self) -> str:
+        return (f"[modeled] GOPS/W={self.gops_per_w:.0f} "
+                f"PE%={100 * self.pe_fraction:.0f} "
+                f"(pe={self.pe_pj:.3g} mem={self.mem_pj:.3g} "
+                f"link={self.link_pj:.3g} ovh={self.overhead_pj:.3g} pJ)")
+
+
+def account(model: EnergyModel, *, flops: float, local_bytes: float = 0.0,
+            remote_bytes: float = 0.0, link_bytes: float = 0.0,
+            instr_overhead_ops: float = 0.0) -> EnergyReport:
+    pe = flops * model.pj_per_flop
+    mem = (local_bytes * model.pj_per_byte_local
+           + remote_bytes * model.pj_per_byte_remote)
+    link = link_bytes * model.pj_per_byte_link
+    ovh = instr_overhead_ops * model.pj_per_instr_overhead
+    return EnergyReport(
+        total_pj=pe + mem + link + ovh, pe_pj=pe, mem_pj=mem, link_pj=link,
+        overhead_pj=ovh, flops=flops)

@@ -1,0 +1,116 @@
+"""Distributed radix-4 DIT Cooley-Tukey FFT — the paper's cfft kernel.
+
+Paper (§V-C): 256-point complex FFTs, 4 radix-4 stages mapped to 4 pipelined
+PE groups of 64; twiddles are stage-constant and preloaded
+(weight-stationary); the digit-reversed input load and the final store use
+the shared-memory path; inter-stage data flows through systolic links.
+
+TPU mapping: the batch of FFTs is sharded over a mesh axis; each device
+group owns one stage; a steady stream of batches flows stage-to-stage via
+ppermute (core.pipeline). A same-device reference (``fft256_radix4``)
+computes the identical staged algorithm locally — it is the per-PE program
+and the oracle for the Pallas kernel twin (kernels/fft).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def digit_reverse_indices(n: int, radix: int = 4) -> np.ndarray:
+    """Digit-reversed (base-``radix``) index permutation for DIT input."""
+    digits = int(round(np.log(n) / np.log(radix)))
+    idx = np.arange(n)
+    out = np.zeros_like(idx)
+    x = idx.copy()
+    for _ in range(digits):
+        out = out * radix + x % radix
+        x //= radix
+    return out
+
+
+def radix4_butterfly(a, b, c, d):
+    """4-point DFT of (a,b,c,d) (complex). Returns the 4 outputs."""
+    t0 = a + c
+    t1 = a - c
+    t2 = b + d
+    t3 = (b - d) * (-1j)
+    return t0 + t2, t1 + t3, t0 - t2, t1 - t3
+
+
+def stage_twiddles(n: int, stage: int, n_stages: int) -> np.ndarray:
+    """Twiddle factors for DIT stage ``stage`` (0 = first after digit-rev).
+
+    Matches the decimation-in-time radix-4 recursion: at stage s the
+    transform size is 4^(s+1); within each block of size L=4^(s+1), output
+    leg j of sub-block r gets twiddle W_L^(r*j), applied to the inputs of
+    the butterfly (standard Cooley-Tukey).
+    """
+    L = 4 ** (stage + 1)
+    quarter = L // 4
+    k = np.arange(n) % L
+    r = k % quarter
+    j = k // quarter                       # which butterfly leg 0..3
+    return np.exp(-2j * np.pi * (r * j) / L)
+
+
+def fft256_radix4(x: jax.Array, n: int = 256) -> jax.Array:
+    """Batched n-point FFT via 4 radix-4 DIT stages. x: [..., n] complex.
+
+    This is the exact per-stage program the systolic mapping pipelines:
+    stage s applies its preloaded twiddles then the radix-4 butterflies.
+    """
+    n_stages = int(round(np.log(n) / np.log(4)))
+    perm = jnp.asarray(digit_reverse_indices(n))
+    y = x[..., perm]
+    for s in range(n_stages):
+        tw = jnp.asarray(stage_twiddles(n, s, n_stages))
+        y = y * tw.astype(y.dtype)
+        L = 4 ** (s + 1)
+        quarter = L // 4
+        shape = y.shape[:-1] + (n // L, 4, quarter)
+        yb = y.reshape(shape)
+        a, b, c, d = yb[..., 0, :], yb[..., 1, :], yb[..., 2, :], yb[..., 3, :]
+        o0, o1, o2, o3 = radix4_butterfly(a, b, c, d)
+        y = jnp.stack([o0, o1, o2, o3], axis=-2).reshape(y.shape)
+    return y
+
+
+def fft_stage(x: jax.Array, stage: int, n: int = 256) -> jax.Array:
+    """One radix-4 stage (the per-PE program of stage group ``stage``)."""
+    n_stages = int(round(np.log(n) / np.log(4)))
+    tw = jnp.asarray(stage_twiddles(n, stage, n_stages))
+    y = x * tw.astype(x.dtype)
+    L = 4 ** (stage + 1)
+    quarter = L // 4
+    shape = y.shape[:-1] + (n // L, 4, quarter)
+    yb = y.reshape(shape)
+    a, b, c, d = yb[..., 0, :], yb[..., 1, :], yb[..., 2, :], yb[..., 3, :]
+    o0, o1, o2, o3 = radix4_butterfly(a, b, c, d)
+    return jnp.stack([o0, o1, o2, o3], axis=-2).reshape(x.shape)
+
+
+def pipelined_fft(xs: jax.Array, mesh, axis: str, mode: str = "qlr",
+                  n: int = 256):
+    """Stage-pipelined distributed FFT: device i of ``axis`` runs stage i
+    for a stream of FFT batches (the paper's 4x64 PE pipeline).
+
+    xs: [M, batch, n] complex microbatches. Requires axis size == 4 stages.
+    """
+    from repro.core.pipeline import pipelined
+
+    n_stages = int(round(np.log(n) / np.log(4)))
+    perm = jnp.asarray(digit_reverse_indices(n))
+
+    def stage_fn(_params, x_mb, stage_idx):
+        # stage 0 also performs the digit-reversed load (shared-memory read)
+        x_mb = jnp.where(stage_idx == 0, x_mb[..., perm], x_mb)
+        branches = [lambda v, s=s: fft_stage(v, s, n) for s in range(n_stages)]
+        return jax.lax.switch(jnp.clip(stage_idx, 0, n_stages - 1),
+                              branches, x_mb)
+
+    dummy_params = jnp.zeros((n_stages, 1))
+    fn = pipelined(stage_fn, mesh, axis, xs.shape[0], mode)
+    return fn(dummy_params, xs)

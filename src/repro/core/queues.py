@@ -1,0 +1,106 @@
+"""Systolic links: queue push/pop over mesh axes, with the paper's three
+link implementations as selectable modes.
+
+Inside a ``shard_map`` body, a systolic *hop* (push to the neighbor + pop
+from the other neighbor) is one ``ppermute`` — the single-instruction queue
+access of **Xqueue** (`q.push`/`q.pop`). The three modes:
+
+  sw      — software-emulated queues: the hop additionally performs the
+            explicit circular-buffer bookkeeping the paper's Fig. 3 shows
+            (head/tail updates, boundary checks, buffer writes), serialized
+            with optimization barriers. Models the instruction-count
+            overhead of software FIFOs (the paper's ~10x-slower variant).
+  xqueue  — one ppermute per hop, but *serialized* against compute with an
+            optimization barrier: fast queue access, yet communication
+            occupies the critical path (explicit q.push/q.pop semantics).
+  qlr     — one ppermute per hop with no false dependencies: XLA's async
+            collective-permute + latency-hiding scheduler overlap the hop
+            with compute, like QLRs autonomously popping into registers.
+
+``stream()`` is the generic driver every systolic kernel builds on: it
+carries an operand buffer around the topology, invoking ``consume`` once
+per hop — compute and communication relate exactly as the mode dictates.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import Topology
+
+MODES = ("sw", "xqueue", "qlr")
+
+
+def hop(topo: Topology, x, mode: str = "qlr"):
+    """One systolic hop: push x to the linked neighbor, pop its operand."""
+    if mode == "sw":
+        return _sw_hop(topo, x)
+    return jax.lax.ppermute(x, topo.axis, topo.perm)
+
+
+def _sw_hop(topo: Topology, x):
+    """Software-queue emulation: 4-deep circular buffer with explicit
+    head/tail bookkeeping around the transfer (cf. paper Fig. 3 left)."""
+    depth = 4
+    buf = jnp.zeros((depth,) + x.shape, x.dtype)
+    head = jnp.zeros((), jnp.int32)
+    tail = jnp.zeros((), jnp.int32)
+    # push: boundary check, write at tail, bump tail
+    nxt_tail = jnp.mod(tail + 1, depth)
+    full = nxt_tail == head                      # boundary check (always false here)
+    buf = jax.lax.dynamic_update_index_in_dim(buf, x, tail, 0)
+    tail = jnp.where(full, tail, nxt_tail)
+    buf, tail = jax.lax.optimization_barrier((buf, tail))
+    # the transfer itself
+    moved = jax.lax.ppermute(buf, topo.axis, topo.perm)
+    moved, head = jax.lax.optimization_barrier((moved, head))
+    # pop: boundary check, read at head, bump head
+    empty = head == tail
+    out = jax.lax.dynamic_index_in_dim(moved, head, 0, keepdims=False)
+    head = jnp.where(empty, head, jnp.mod(head + 1, depth))
+    out = jax.lax.optimization_barrier((out, head))[0]
+    return out
+
+
+def stream(topo: Topology, x0, n_steps: int,
+           consume: Callable[[Any, Any, Any], Any], state0,
+           mode: str = "qlr", unroll: bool = True):
+    """Drive a systolic stream: per step, consume the current operand and
+    forward it along the topology.
+
+    consume(state, operand, step_index) -> state.
+    qlr: hop(t) is independent of consume(t) -> overlappable.
+    xqueue/sw: a barrier ties consume's output to the hop -> serialized.
+    """
+    assert mode in MODES, mode
+
+    def body(carry, t):
+        buf, state = carry
+        if mode == "qlr":
+            nxt = hop(topo, buf, mode)          # issue the hop first …
+            state = consume(state, buf, t)      # … compute overlaps
+        else:
+            state = consume(state, buf, t)
+            state, buf = jax.lax.optimization_barrier((state, buf))
+            nxt = hop(topo, buf, mode)
+        return (nxt, state), None
+
+    (buf, state), _ = jax.lax.scan(
+        body, (x0, state0), jnp.arange(n_steps),
+        unroll=n_steps if unroll else 1)
+    return state, buf
+
+
+def multicast(x, axis: str):
+    """Shared-memory multicast: every device reads the same operand
+    (all-gather). The paper's concurrent-load collective."""
+    return jax.lax.all_gather(x, axis, axis=0, tiled=False)
+
+
+def gather_store(x, axis: str):
+    """Shared-memory gather: concurrent independent stores land as a
+    sharded output (identity inside shard_map — each PE keeps its tile)."""
+    return x

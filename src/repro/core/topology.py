@@ -1,0 +1,81 @@
+"""Systolic topologies over mesh axes.
+
+The paper's queues live at arbitrary shared-memory addresses, so any PE
+graph is expressible and reconfigurable at runtime. The TPU analogue: a
+topology is a permutation over the devices of one mesh axis, realized by
+``jax.lax.ppermute``; building a different Topology object *is* the runtime
+reconfiguration (no hardware rewiring, exactly like re-pointing queues).
+
+Supported (all used by the paper's kernels):
+  ring      — circular stream (collective matmuls)
+  chains    — k independent open chains (conv2d multi-chain trade-off,
+              Table III; chain heads are the "mover PEs")
+  torus rows/cols — a 1-D axis folded into an RxC grid (matmul 16x16 vs
+              8x32 grid remapping, Table II)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Topology:
+    name: str
+    axis: str
+    size: int
+    perm: tuple[tuple[int, int], ...]
+
+    @property
+    def sources(self) -> set[int]:
+        return {s for s, _ in self.perm}
+
+    def neighbors_of(self, idx: int) -> list[int]:
+        return [d for s, d in self.perm if s == idx]
+
+
+def ring(axis: str, size: int, step: int = 1) -> Topology:
+    perm = tuple((i, (i + step) % size) for i in range(size))
+    return Topology(f"ring{step:+d}", axis, size, perm)
+
+
+def chains(axis: str, size: int, n_chains: int = 1) -> Topology:
+    """k independent open chains; element 0 of each chain is the head
+    (mover PE). No wrap-around link."""
+    assert size % n_chains == 0, (size, n_chains)
+    length = size // n_chains
+    perm = []
+    for c in range(n_chains):
+        base = c * length
+        for i in range(length - 1):
+            perm.append((base + i, base + i + 1))
+    return Topology(f"chains{n_chains}", axis, size, tuple(perm))
+
+
+def snake_ring(axis: str, rows: int, cols: int) -> Topology:
+    """Single ring visiting all RxC devices in boustrophedon (snake) order:
+    consecutive hops are row-neighbors except at row turns — the paper's
+    wide-grid remap (16x16 -> 8x32) that maximizes tile-local links."""
+    size = rows * cols
+    order = []
+    for r in range(rows):
+        cs = range(cols) if r % 2 == 0 else range(cols - 1, -1, -1)
+        order += [r * cols + c for c in cs]
+    perm = tuple((order[i], order[(i + 1) % size]) for i in range(size))
+    return Topology(f"snake{rows}x{cols}", axis, size, perm)
+
+
+def torus_shift(axis: str, rows: int, cols: int, *, direction: str) -> Topology:
+    """Fold a 1-D device axis into an RxC grid; shift right or down."""
+    size = rows * cols
+    perm = []
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if direction == "right":
+                j = r * cols + (c + 1) % cols
+            elif direction == "down":
+                j = ((r + 1) % rows) * cols + c
+            else:
+                raise ValueError(direction)
+            perm.append((i, j))
+    return Topology(f"torus{rows}x{cols}_{direction}", axis, size, tuple(perm))

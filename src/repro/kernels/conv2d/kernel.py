@@ -1,0 +1,63 @@
+"""Weight-stationary 3x3 conv2d Pallas kernel — the paper's conv2d PE
+program (§V-B) on the TPU memory hierarchy.
+
+MemPool PE view: the 3x3 kernel is stationary in registers; image rows
+stream in — two rows popped from the upstream PE's queue, the rest loaded
+from memory. TPU view: the kernel weights are a stationary VMEM block; row
+blocks stream HBM->VMEM through the grid pipeline. The halo rows are
+expressed by passing the image three times with shifted index maps
+(prev/current/next row block) — the "pop from neighbor" of the chain
+topology; boundary blocks mask their missing neighbor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(xp_ref, xc_ref, xn_ref, k_ref, o_ref, *, n_blocks: int):
+    i = pl.program_id(0)
+    xc = xc_ref[...]
+    bm, w = xc.shape
+    top = jnp.where(i == 0, jnp.zeros((1, w), xc.dtype), xp_ref[-1:, :])
+    bot = jnp.where(i == n_blocks - 1, jnp.zeros((1, w), xc.dtype),
+                    xn_ref[:1, :])
+    x_ext = jnp.concatenate([top, xc, bot], axis=0)           # [bm+2, W]
+    xpad = jnp.pad(x_ext, ((0, 0), (1, 1)))
+    acc = jnp.zeros((bm, w), jnp.float32)
+    for dr in range(3):
+        for dc in range(3):
+            acc = acc + k_ref[dr, dc].astype(jnp.float32) * jax.lax.dynamic_slice(
+                xpad, (dr, dc), (bm, w)).astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def conv2d_3x3(x: jax.Array, kernel: jax.Array, *, bm: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """Zero-padded 3x3 convolution. x: [H, W]; kernel: [3, 3]."""
+    h, w = x.shape
+    bm = min(bm, h)
+    assert h % bm == 0, (h, bm)
+    n_blocks = h // bm
+    body = functools.partial(_conv_kernel, n_blocks=n_blocks)
+
+    def clamp(i):
+        return i  # index maps below handle prev/next clamping
+
+    call = pl.pallas_call(
+        body,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (jnp.maximum(i - 1, 0), 0)),
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((bm, w), lambda i: (jnp.minimum(i + 1, n_blocks - 1), 0)),
+            pl.BlockSpec((3, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        interpret=interpret,
+    )
+    return call(x, x, x, kernel)

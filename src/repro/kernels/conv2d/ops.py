@@ -1,0 +1,17 @@
+"""jit'd wrapper for the conv2d kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.conv2d.kernel import conv2d_3x3 as _conv
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def conv2d(x: jax.Array, kernel: jax.Array, *, bm: int = 128) -> jax.Array:
+    return _conv(x, kernel, bm=bm, interpret=not _on_tpu())

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the conv2d kernel (shared with core.halo)."""
+from repro.core.halo import conv2d_ref  # noqa: F401

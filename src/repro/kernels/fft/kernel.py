@@ -1,0 +1,75 @@
+"""Radix-4 DIT FFT stage Pallas kernel — the paper's cfft PE program.
+
+MemPool PE view (§V-C): each PE of stage group s holds its stage-constant
+twiddles preloaded in registers (weight-stationary) and processes radix-4
+butterflies for a stream of FFTs. TPU view: the twiddle vectors are a
+stationary VMEM block; batches of FFTs stream through the grid. Complex
+values travel as separate real/imag planes (VPU-friendly; TPUs have no
+complex MXU type). One kernel call = one stage; the 4-stage pipeline is
+driven by ops.py (or distributed across devices by core.fft.pipelined_fft).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stage_kernel(xr_ref, xi_ref, twr_ref, twi_ref, or_ref, oi_ref, *,
+                  stage: int, n: int):
+    xr = xr_ref[...].astype(jnp.float32)                     # [bb, n]
+    xi = xi_ref[...].astype(jnp.float32)
+    twr = twr_ref[...].astype(jnp.float32)                   # [1, n]
+    twi = twi_ref[...].astype(jnp.float32)
+    # twiddle multiply (complex): x * tw
+    yr = xr * twr - xi * twi
+    yi = xr * twi + xi * twr
+    bb = yr.shape[0]
+    L = 4 ** (stage + 1)
+    q = L // 4
+    shape = (bb, n // L, 4, q)
+    ar, ai = yr.reshape(shape), yi.reshape(shape)
+    a_r, b_r, c_r, d_r = ar[:, :, 0], ar[:, :, 1], ar[:, :, 2], ar[:, :, 3]
+    a_i, b_i, c_i, d_i = ai[:, :, 0], ai[:, :, 1], ai[:, :, 2], ai[:, :, 3]
+    # radix-4 butterfly: t3 = (b - d) * (-1j)
+    t0r, t0i = a_r + c_r, a_i + c_i
+    t1r, t1i = a_r - c_r, a_i - c_i
+    t2r, t2i = b_r + d_r, b_i + d_i
+    t3r, t3i = b_i - d_i, -(b_r - d_r)
+    o0r, o0i = t0r + t2r, t0i + t2i
+    o1r, o1i = t1r + t3r, t1i + t3i
+    o2r, o2i = t0r - t2r, t0i - t2i
+    o3r, o3i = t1r - t3r, t1i - t3i
+    outr = jnp.stack([o0r, o1r, o2r, o3r], axis=2).reshape(bb, n)
+    outi = jnp.stack([o0i, o1i, o2i, o3i], axis=2).reshape(bb, n)
+    or_ref[...] = outr.astype(or_ref.dtype)
+    oi_ref[...] = outi.astype(oi_ref.dtype)
+
+
+def fft_stage(xr: jax.Array, xi: jax.Array, twr: jax.Array, twi: jax.Array,
+              *, stage: int, bb: int = 64, interpret: bool = False):
+    """One radix-4 stage over a batch. xr/xi: [B, n]; twr/twi: [n]."""
+    b, n = xr.shape
+    bb = min(bb, b)
+    assert b % bb == 0
+    body = functools.partial(_stage_kernel, stage=stage, n=n)
+    call = pl.pallas_call(
+        body,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b, n), xr.dtype),
+                   jax.ShapeDtypeStruct((b, n), xi.dtype)],
+        interpret=interpret,
+    )
+    return call(xr, xi, twr[None], twi[None])

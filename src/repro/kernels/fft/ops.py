@@ -1,0 +1,33 @@
+"""jit'd wrapper: full batched 256-point FFT from 4 staged kernel calls."""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fft import digit_reverse_indices, stage_twiddles
+from repro.kernels.fft.kernel import fft_stage
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bb"))
+def fft256(x: jax.Array, *, n: int = 256, bb: int = 64) -> jax.Array:
+    """x: [B, n] complex64 -> FFT via radix-4 stage kernels."""
+    n_stages = int(round(np.log(n) / np.log(4)))
+    perm = jnp.asarray(digit_reverse_indices(n))
+    y = x[..., perm]
+    xr, xi = jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+    interpret = not _on_tpu()
+    for s in range(n_stages):
+        tw = stage_twiddles(n, s, n_stages)
+        twr = jnp.asarray(np.real(tw), jnp.float32)
+        twi = jnp.asarray(np.imag(tw), jnp.float32)
+        xr, xi = fft_stage(xr, xi, twr, twi, stage=s, bb=bb,
+                           interpret=interpret)
+    return xr + 1j * xi

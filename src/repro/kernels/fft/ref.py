@@ -1,0 +1,10 @@
+"""Oracles for the FFT kernel: the staged radix-4 reference (core.fft) and
+numpy's FFT as ground truth."""
+import jax.numpy as jnp
+
+from repro.core.fft import fft256_radix4  # noqa: F401
+
+
+def fft_ref(x):
+    """Ground truth via jnp.fft over the last axis."""
+    return jnp.fft.fft(x, axis=-1)

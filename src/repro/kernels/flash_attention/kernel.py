@@ -1,0 +1,93 @@
+"""Streaming-softmax (flash) attention Pallas kernel.
+
+The KV stream is the systolic reading of attention: the stationary state
+per q block is (m, l, acc) in VMEM scratch; KV blocks flow through the
+grid's sequential dimension exactly like queue pops, with Pallas's implicit
+double-buffering prefetching block k+1 during block k's MXU work (the QLR
+analogue). Oracle: models/attention.blocked_attention (same online-softmax
+math in pure jnp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, bq: int, bkv: int, n_kv: int, causal: bool):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                         # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                         # [bkv, d]
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = iq * bq + jnp.arange(bq)
+        k_pos = ik * bkv + jnp.arange(bkv)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bkv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q,k,v: [BH, S, D] (heads folded into batch). Returns [BH, S, D]."""
+    bh, s, d = q.shape
+    skv = k.shape[1]
+    bq = min(bq, s)
+    bkv = min(bkv, skv)
+    assert s % bq == 0 and skv % bkv == 0
+    scale = 1.0 / (d ** 0.5)
+    body = functools.partial(_flash_kernel, scale=scale, bq=bq, bkv=bkv,
+                             n_kv=skv // bkv, causal=causal)
+    try:
+        params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except TypeError:
+        params = None
+    call = pl.pallas_call(
+        body,
+        grid=(bh, s // bq, skv // bkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+        **({"compiler_params": params} if params else {}),
+    )
+    return call(q, k, v)

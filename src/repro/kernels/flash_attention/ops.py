@@ -1,0 +1,30 @@
+"""jit'd wrapper for flash attention over [B,S,H,D] layouts."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention as _flash
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bkv: int = 128):
+    """q: [B,S,H,D], k/v: [B,S,Kv,D] (GQA KV expanded by repeat)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    o = _flash(qf, kf, vf, causal=causal, bq=bq, bkv=bkv,
+               interpret=not _on_tpu())
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)

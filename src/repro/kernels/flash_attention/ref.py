@@ -1,0 +1,19 @@
+"""Oracles for flash attention: plain softmax attention (ground truth) and
+the online-softmax scan in models/attention.py (same math, pure jnp)."""
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import blocked_attention  # noqa: F401
+
+
+def attention_ref(q, k, v, causal=True):
+    """q,k,v: [BH, S, D] fp32 reference."""
+    d = q.shape[-1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, k.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,96 @@
+"""Mamba2 SSD chunk Pallas kernel.
+
+The SSD decomposition (models/ssm.py) has three parts: MXU-heavy
+intra-chunk matmuls, per-chunk boundary states, and a linear inter-chunk
+recurrence. This kernel computes the first two for one (batch*head, chunk)
+grid cell; the recurrence — the systolic chain — runs outside (ops.py),
+matching the paper's split between PE-local compute and queue traffic.
+
+The B/C projections are shared across the heads of a group (ngroups);
+their BlockSpec index_map maps head -> group, so the same VMEM block is
+served to every head of the group — the QLR "data reuse degree" expressed
+as an index map (no materialized expansion).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, expcum_ref, *, chunk: int):
+    x = x_ref[0, 0].astype(jnp.float32)                      # [L, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)                    # [L, 1] -> [L]
+    dt = dt[:, 0]
+    a = a_ref[0, 0]                                          # [1,1] scalar
+    bmat = b_ref[0, 0].astype(jnp.float32)                   # [L, N]
+    cmat = c_ref[0, 0].astype(jnp.float32)                   # [L, N]
+    l = chunk
+
+    dA = dt * a[0, 0]                                        # [L]
+    cum = jnp.cumsum(dA)                                     # [L]
+    # decay[t, s] = exp(cum[t] - cum[s]) for s <= t
+    diff = cum[:, None] - cum[None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    # intra-chunk: M = (C B^T) * decay * dt[s];  y = M @ x   (MXU)
+    cb = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)
+    m = cb * decay * dt[None, :]
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32)    # [L, P]
+    # chunk boundary state: S = (x * (exp(cum[-1]-cum) * dt))^T @ B  [P, N]
+    w = jnp.exp(cum[-1] - cum) * dt                          # [L]
+    state = jnp.dot((x * w[:, None]).T, bmat,
+                    preferred_element_type=jnp.float32)      # [P, N]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    state_ref[0, 0] = state.astype(state_ref.dtype)
+    expcum_ref[0, 0] = jnp.exp(cum)[:, None].astype(expcum_ref.dtype)
+
+
+def ssd_chunks(x, dt, a, b, c, *, nheads: int, ngroups: int,
+               interpret: bool = False):
+    """Intra-chunk SSD pass.
+
+    x:  [BH, NC, L, P]   (batch*heads, chunks, chunk_len, headdim)
+    dt: [BH, NC, L, 1]   (post-softplus)
+    a:  [BH, 1, 1, 1]    (negative per-head decay rate)
+    b/c:[BG, NC, L, N]   (batch*groups; shared across heads of a group)
+
+    Returns y_intra [BH,NC,L,P], states [BH,NC,P,N], expcum [BH,NC,L,1].
+    """
+    bh, nc, l, p = x.shape
+    n = b.shape[-1]
+    heads_per_group = nheads // ngroups
+    body = functools.partial(_ssd_chunk_kernel, chunk=l)
+
+    def bc_index(i, j):
+        # head i of batch (i // nheads) -> group row in the [BG, ...] array
+        batch = i // nheads
+        head = i % nheads
+        return (batch * ngroups + head // heads_per_group, j, 0, 0)
+
+    call = pl.pallas_call(
+        body,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, l, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1, l, n), bc_index),
+            pl.BlockSpec((1, 1, l, n), bc_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, l, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, l, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return call(x, dt, a, b, c)

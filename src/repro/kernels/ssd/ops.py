@@ -1,0 +1,56 @@
+"""jit'd wrapper: full SSD scan = Pallas intra-chunk pass + the systolic
+inter-chunk chain + inter-chunk output correction."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_chunks
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, a, b, c, d, *, chunk: int = 64):
+    """Full SSD. x: [B,S,H,P]; dt: [B,S,H] (post-softplus); a: [H] (<0);
+    b,c: [B,S,G,N]; d: [H]. Returns y [B,S,H,P] (fp32)."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xk = x.transpose(0, 2, 1, 3).reshape(bsz * h, nc, chunk, p)
+    dtk = dt.transpose(0, 2, 1).reshape(bsz * h, nc, chunk, 1)
+    ak = jnp.broadcast_to(a[None, :], (bsz, h)).reshape(bsz * h, 1, 1, 1)
+    bk = b.transpose(0, 2, 1, 3).reshape(bsz * g, nc, chunk, n)
+    ck = c.transpose(0, 2, 1, 3).reshape(bsz * g, nc, chunk, n)
+
+    y_intra, states, expcum = ssd_chunks(
+        xk, dtk, ak, bk, ck, nheads=h, ngroups=g, interpret=not _on_tpu())
+
+    # inter-chunk systolic chain: entering[c] = entering[c-1]*decay + S[c-1]
+    chunk_decay = expcum[:, :, -1, 0]                        # [BH, NC]
+
+    def chain(prev, inp):
+        dec, s_new = inp
+        nxt = prev * dec[:, None, None] + s_new
+        return nxt, prev
+
+    _, entering = jax.lax.scan(
+        chain, jnp.zeros((bsz * h, p, n), jnp.float32),
+        (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    entering = entering.swapaxes(0, 1)                       # [BH, NC, P, N]
+
+    # inter-chunk output: y += exp(cum[t]) * C[t] . entering_state
+    rep = h // g
+    ck_h = jnp.repeat(
+        ck.reshape(bsz, g, nc, chunk, n), rep, axis=1
+    ).reshape(bsz * h, nc, chunk, n)
+    y_inter = jnp.einsum("zcln,zcpn,zcl->zclp", ck_h, entering,
+                         expcum[..., 0])
+    y = (y_intra + y_inter).reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    return y + x.astype(jnp.float32) * d[None, None, :, None]

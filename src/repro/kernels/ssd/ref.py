@@ -1,0 +1,28 @@
+"""Oracle for the SSD kernel: the chunked pure-jnp SSD from models/ssm.py
+(itself property-tested against a sequential recurrence)."""
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked  # noqa: F401
+
+
+def ssd_sequential_ref(x, dt, a, b, c, d):
+    """O(S) sequential state recurrence — ground truth for small sizes.
+
+    x: [B,S,H,P]; dt: [B,S,H]; a: [H]; b,c: [B,S,G,N]; d: [H].
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+    state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        da = jnp.exp(dt[:, t] * a[None, :])                 # [B,H]
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, t],
+                         x[:, t].astype(jnp.float32), bh[:, t])
+        state = state * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ch[:, t])
+        ys.append(y)
+    y = jnp.stack(ys, axis=1)                                # [B,S,H,P]
+    return y + x.astype(jnp.float32) * d[None, None, :, None]

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the systolic matmul kernel.
+
+On non-TPU backends (this container) the kernel body executes in Pallas
+interpret mode; on TPU the same BlockSpecs compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.systolic_matmul.kernel import matmul as _matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def systolic_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                    bn: int = 128, bk: int = 128) -> jax.Array:
+    return _matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=not _on_tpu())

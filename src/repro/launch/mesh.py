@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 chips (data, model). Multi-pod: 2 pods x 256 chips
+    (pod, data, model); the 'pod' axis rides DCN, 'data'/'model' ride ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Generic mesh for tests/benchmarks (e.g. (8,) ('model',) on 8 fake
+    CPU devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Performance hillclimbing driver (§Perf).
+
+Runs named variants of the three selected cells (worst roofline fraction /
+most collective-bound / most paper-representative), re-lowers, re-analyzes,
+and prints before/after roofline terms. Results land in
+artifacts/perf/<cell>__<variant>.json (+ .hlo.zst).
+
+  PYTHONPATH=src python -m repro.launch.perf --cell granite --variant v1_qlr
+  PYTHONPATH=src python -m repro.launch.perf --list
+  PYTHONPATH=src python -m repro.launch.perf --report
+"""
+import argparse
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "perf"
+BASELINES = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# variant = (arch, shape, systolic_mode, cfg_overrides, train_overrides)
+VARIANTS = {
+    # -- granite-34b train_4k: the paper-representative dense-TP cell -------
+    "granite": {
+        "arch": "granite-34b", "shape": "train_4k",
+        "v0_noSPfix": ("baseline", {"sequence_parallel": False}, {}),
+        "v1_spfix": ("baseline", {}, {}),
+        "v2_xqueue_ring": ("xqueue", {}, {}),
+        "v3_qlr_ring": ("qlr", {}, {}),
+        "v4_qlr_mb4": ("qlr", {}, {"microbatches": 4}),
+        "v5_qlr_mb4_sel": ("qlr", {"remat": "selective"},
+                           {"microbatches": 4}),
+        "v6_qlr_mb8_sel": ("qlr", {"remat": "selective"},
+                           {"microbatches": 8}),
+        # v7: + systolic attention out-projection ring (qkv ring is blocked
+        # for granite by kv=1 non-divisibility; out-proj has 48 heads)
+        "v7_qlr_attn_sel": ("qlr", {"remat": "selective"},
+                            {"microbatches": 4}),
+    },
+    # -- mixtral-8x22b train_4k: worst roofline fraction + most
+    #    collective-bound -----------------------------------------------------
+    "mixtral": {
+        "arch": "mixtral-8x22b", "shape": "train_4k",
+        "v1_spfix": ("baseline", {}, {}),
+        "v2_subexperts": ("baseline", {"moe_subexperts": 2}, {}),
+        "v3_sub_mb4": ("baseline", {"moe_subexperts": 2},
+                       {"microbatches": 4}),
+        "v4_sub_mb4_cf1": ("baseline",
+                           {"moe_subexperts": 2, "capacity_factor": 1.0},
+                           {"microbatches": 4}),
+        "v5_sub_mb2_cf1": ("baseline",
+                           {"moe_subexperts": 2, "capacity_factor": 1.0},
+                           {"microbatches": 2}),
+    },
+    # -- deepseek-v2-lite train_4k: EP-collective-bound MoE -----------------
+    "deepseek": {
+        "arch": "deepseek-v2-lite-16b", "shape": "train_4k",
+        "v1_spfix": ("baseline", {}, {}),
+        "v2_mb4": ("baseline", {}, {"microbatches": 4}),
+        "v3_mb4_cf1": ("baseline", {"capacity_factor": 1.0},
+                       {"microbatches": 4}),
+        "v4_mb2": ("baseline", {"capacity_factor": 1.0},
+                   {"microbatches": 2}),
+    },
+    # -- internvl2-1b train_4k: the memory-bound cell (4th, beyond the
+    #    required three): a 0.5B model wasting a 16-way TP axis ------------
+    "internvl": {
+        "arch": "internvl2-1b", "shape": "train_4k",
+        "i1_spfix": ("baseline", {}, {}),
+        "i2_pure_dp": ("baseline", {"parallelism": "dp"},
+                       {"microbatches": 1}),
+        "i3_dp_mb4": ("baseline", {"parallelism": "dp"},
+                      {"microbatches": 4}),
+    },
+}
+
+
+def run_variant(cell_key: str, variant: str):
+    from repro.launch.dryrun import run_cell
+    spec = VARIANTS[cell_key]
+    mode, cfg_over, train_over = spec[variant]
+    rec = run_cell(spec["arch"], spec["shape"], multi_pod=False,
+                   systolic_mode=mode, out_dir=ARTIFACTS,
+                   extra_overrides=cfg_over or None, tag=variant,
+                   train_overrides=train_over or None)
+    return rec
+
+
+def report():
+    from repro.roofline.analysis import analyze_cell
+    for cell_key, spec in VARIANTS.items():
+        arch, shape = spec["arch"], spec["shape"]
+        base = BASELINES / f"{arch}__{shape}__single.json"
+        rows = []
+        if base.exists():
+            r = analyze_cell(base)
+            if r:
+                rows.append(("baseline(v0-record)", r))
+        for name in spec:
+            if name in ("arch", "shape"):
+                continue
+            mode = spec[name][0]
+            fname = f"{arch}__{shape}__single"
+            if mode != "baseline":
+                fname += f"__{mode}"
+            fname += f"__{name}.json"
+            p = ARTIFACTS / fname
+            if p.exists():
+                r = analyze_cell(p)
+                if r:
+                    rows.append((name, r))
+        if not rows:
+            continue
+        print(f"\n### {cell_key}: {arch} x {shape} (single pod)")
+        print("| variant | compute s | memory s | collective s | bound | "
+              "step bound s | useful |")
+        print("|---|---|---|---|---|---|---|")
+        for name, r in rows:
+            print(f"| {name} | {r['compute_s']:.2f} | {r['memory_s']:.2f} | "
+                  f"{r['collective_s']:.2f} | {r['dominant']} | "
+                  f"{r['step_s_bound']:.2f} | {r['useful_ratio']:.2f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(VARIANTS))
+    ap.add_argument("--variant")
+    ap.add_argument("--all-variants", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for k, spec in VARIANTS.items():
+            vs = [v for v in spec if v not in ("arch", "shape")]
+            print(f"{k}: {spec['arch']} x {spec['shape']}: {', '.join(vs)}")
+        return
+    if args.report:
+        report()
+        return
+    assert args.cell
+    variants = ([v for v in VARIANTS[args.cell]
+                 if v not in ("arch", "shape")]
+                if args.all_variants else [args.variant])
+    for v in variants:
+        spec = VARIANTS[args.cell]
+        mode = spec[v][0]
+        fname = f"{spec['arch']}__{spec['shape']}__single"
+        if mode != "baseline":
+            fname += f"__{mode}"
+        fname += f"__{v}.json"
+        if args.skip_existing and (ARTIFACTS / fname).exists():
+            prev = json.loads((ARTIFACTS / fname).read_text())
+            if prev.get("ok"):
+                print(f"[{v}] cached ok")
+                continue
+        run_variant(args.cell, v)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.models.model import build_model, input_specs
+from repro.models.common import (
+    Param,
+    shard,
+    split_tree,
+    spec_for,
+    use_sharding,
+)

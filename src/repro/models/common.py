@@ -1,0 +1,487 @@
+"""Common model substrate: parameter system, logical-axis sharding context,
+norms, embeddings, rotary, and the systolic-aware dense layer.
+
+Parameters are created through :func:`param`, which attaches *logical axis
+names* to every tensor. ``split_tree`` separates a Param tree into a plain
+value tree (what model code computes with) and an axes tree (what the
+partitioner consumes). Logical axes resolve to mesh axes through
+:class:`AxisRules` with automatic divisibility fallback, so GQA heads that
+don't divide the tensor-parallel axis degrade gracefully to replication
+instead of failing to compile.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Param: tensors tagged with logical axes
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Param:
+    value: Any
+    axes: tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def param(key, shape, axes, dtype, init: str = "normal", scale: float | None = None) -> Param:
+    """Create a tagged parameter. ``axes`` are logical names (or None)."""
+    assert len(shape) == len(axes), (shape, axes)
+    dtype = jnp.dtype(dtype)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    elif init == "normal":
+        if scale is None:
+            # fan-in scaling on the first axis by convention
+            scale = 1.0 / math.sqrt(max(shape[0], 1))
+        v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    else:
+        raise ValueError(init)
+    return Param(v, tuple(axes))
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_tree(tree):
+    """Param tree -> (values tree, axes tree).
+
+    Stacked (vmapped) params have more dims than recorded axes; the extra
+    leading dims are scan/stack axes and map to ``None`` (unsharded).
+    """
+    def _value(p: Param):
+        return p.value
+
+    def _axes(p: Param):
+        nd = p.value.ndim if hasattr(p.value, "ndim") else len(p.value.shape)
+        pad = nd - len(p.axes)
+        return (None,) * pad + tuple(p.axes)
+
+    values = jax.tree_util.tree_map(_value, tree, is_leaf=is_param)
+    axes = jax.tree_util.tree_map(_axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def stack_init(init_fn: Callable, key, n: int):
+    """vmap an init function over ``n`` layer keys -> stacked Param tree."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding context
+# ---------------------------------------------------------------------------
+
+# Logical axis -> ordered candidate mesh-axis tuples. First candidate whose
+# axes (a) all exist in the mesh, (b) are not already used by another dim of
+# the same tensor, and (c) whose total size divides the dim, wins.
+DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    "batch": (("pod", "data"), ("data",)),
+    "seq": ((),),                       # replicated by default (no SP)
+    "seq_sp": (("model",),),            # sequence-parallel regions
+    "embed": ((),),                     # activations: embed replicated
+    "w_embed": (("data",),),            # weights: FSDP over data
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": ((),),
+    "ff": (("model",),),
+    "vocab": (("model",),),
+    "experts": (("model",),),
+    "expert_cap": (("model",),),        # fallback when experts not shardable
+    "ssm_heads": (("model",),),
+    "ssm_state": ((),),
+    "cache_batch": (("pod", "data"), ("data",)),
+    "cache_seq": (("data",),),          # context parallelism for long decode
+    "cache_seq_rep": ((),),
+    "frames": ((),),
+    "patches": ((),),
+    "lora": ((),),
+    "conv": ((),),
+}
+
+
+@dataclass
+class ShardCtx:
+    mesh: Mesh
+    rules: dict[str, tuple[tuple[str, ...], ...]]
+
+    def axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(name, 0)
+
+
+_CTX: contextvars.ContextVar[Optional[ShardCtx]] = contextvars.ContextVar(
+    "repro_shard_ctx", default=None
+)
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: dict | None = None):
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    token = _CTX.set(ShardCtx(mesh, merged))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def resolve_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 ctx: ShardCtx) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallbacks."""
+    mesh_sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    used: set[str] = set()
+    parts: list = []
+    for dim, name in zip(shape, axes):
+        chosen = None
+        if name is not None:
+            for cand in ctx.rules.get(name, ((),)):
+                if not cand:
+                    break
+                if any(a not in mesh_sizes or a in used for a in cand):
+                    continue
+                total = math.prod(mesh_sizes[a] for a in cand)
+                if total and dim % total == 0:
+                    chosen = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+        parts.append(chosen)
+    # trim trailing Nones for tidier specs
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes. No-op without context."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = resolve_spec(x.shape, axes, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+DP_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    # pure-DP regime: batch over every axis; weights ZeRO-3 over both axes;
+    # no tensor parallelism (all model dims replicated)
+    "batch": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    "seq_sp": ((),),
+    "heads": ((),),
+    "kv_heads": ((),),
+    "ff": ((),),
+    "vocab": ((),),
+    "experts": ((),),
+    "expert_cap": ((),),
+    "ssm_heads": ((),),
+    "w_embed": (("data", "model"), ("data",)),
+    "cache_batch": (("pod", "data", "model"), ("data", "model"), ("data",)),
+}
+
+
+def rules_for(cfg: ModelConfig) -> dict | None:
+    return DP_RULES if cfg.parallelism == "dp" else None
+
+
+def shard_residual(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Residual-stream constraint at block boundaries. With sequence
+    parallelism the saved per-layer scan residuals shard over 'model'
+    (16x smaller stacks), and XLA turns the TP boundary collectives into
+    all-gather / reduce-scatter pairs (Megatron-SP)."""
+    if cfg.sequence_parallel:
+        return shard(x, "batch", "seq_sp", "embed")
+    return shard(x, "batch", "seq", "embed")
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             mesh: Mesh, rules: dict | None = None) -> P:
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    return resolve_spec(shape, axes, ShardCtx(mesh, merged))
+
+
+# ---------------------------------------------------------------------------
+# Numerics helpers
+# ---------------------------------------------------------------------------
+
+
+def adtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(key, cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": param(key, (d,), ("embed",), pdtype(cfg), init="ones")}
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": param(key, (d,), ("embed",), pdtype(cfg), init="ones"),
+            "bias": param(key, (d,), ("embed",), pdtype(cfg), init="zeros"),
+        }
+    if cfg.norm_type == "nonparam_ln":
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float | None = None):
+    eps = eps or cfg.norm_eps
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    # layernorm variants
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm_type == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_simple(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # [head_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                  # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., s, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]                     # [..., s, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(num_pos: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal position table [num_pos, d]."""
+    log_ts_incr = math.log(10000.0) / max(d // 2 - 1, 1)
+    inv = jnp.exp(-log_ts_incr * jnp.arange(d // 2, dtype=jnp.float32))
+    scaled = jnp.arange(num_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Dense layers (systolic-aware)
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, axes, cfg: ModelConfig,
+               bias: bool = False, scale: float | None = None):
+    k1, k2 = jax.random.split(key)
+    p = {"w": param(k1, (d_in, d_out), axes, pdtype(cfg), scale=scale)}
+    if bias:
+        p["b"] = param(k2, (d_out,), (axes[-1],), pdtype(cfg), init="zeros")
+    return p
+
+
+def dense(params, x, cfg: ModelConfig, out_axes: tuple = ()):
+    """y = x @ w (+ b). Systolic ring variants dispatch at the block level
+    (see transformer.block_forward + core/collective_matmul)."""
+    w = params["w"]
+    y = jnp.einsum("...d,df->...f", x.astype(adtype(cfg)), w.astype(adtype(cfg)))
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    if out_axes:
+        y = shard(y, *out_axes)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embeddings & LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig):
+    return {
+        "table": param(key, (cfg.vocab_size, cfg.d_model), ("vocab", "w_embed"),
+                       pdtype(cfg), scale=0.02),
+    }
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    out = jnp.take(params["table"].astype(adtype(cfg)), tokens, axis=0)
+    return shard(out, "batch", "seq", "embed")
+
+
+def lm_logits(head_params, embed_params, x, cfg: ModelConfig):
+    """Final projection to vocab (tied or untied). Returns fp32 logits."""
+    if cfg.tie_embeddings:
+        w = embed_params["table"]            # [V, D]
+        logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                            w.astype(jnp.float32))
+    else:
+        w = head_params["w"]                 # [D, V]
+        logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                            w.astype(jnp.float32))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def init_lm_head(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": param(key, (cfg.d_model, cfg.vocab_size), ("w_embed", "vocab"),
+                       pdtype(cfg))}
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def lm_loss_chunked(head_params, embed_params, x, targets, cfg: ModelConfig,
+                    mask: jax.Array | None = None, chunk: int = 512,
+                    z_loss: float = 0.0):
+    """CE loss without materializing [B,S,V] logits.
+
+    Scans over sequence chunks; each chunk's logits are computed, reduced to
+    (ce, lse) and rematerialized in the backward pass (jax.checkpoint), so
+    peak memory is O(B * chunk * V / devices) instead of O(B * S * V).
+    """
+    b, s, d = x.shape
+    if s <= chunk:
+        logits = lm_logits(head_params, embed_params, x, cfg)
+        return softmax_cross_entropy(logits, targets, mask, z_loss)
+    nch = (s + chunk - 1) // chunk
+    pad = nch * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask_full = jnp.pad(
+            mask if mask is not None else jnp.ones((b, s), jnp.float32),
+            ((0, 0), (0, pad)))
+    else:
+        mask_full = mask if mask is not None else jnp.ones((b, s), jnp.float32)
+    xc = x.reshape(b, nch, chunk, d).swapaxes(0, 1)
+    tc = targets.reshape(b, nch, chunk).swapaxes(0, 1)
+    mc = mask_full.reshape(b, nch, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        xs, ts, ms = inp
+        logits = lm_logits(head_params, embed_params, xs, cfg)
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, ts[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+        ce = lse - tl
+        if z_loss:
+            ce = ce + z_loss * jnp.square(lse)
+        num, den = carry
+        return (num + jnp.sum(ce * ms), den + jnp.sum(ms)), None
+
+    (num, den), _ = jax.lax.scan(chunk_loss, (jnp.zeros(()), jnp.zeros(())),
+                                 (xc, tc, mc))
+    return num / jnp.maximum(den, 1.0)
+
+
+def softmax_cross_entropy(logits: jax.Array, targets: jax.Array,
+                          mask: jax.Array | None = None,
+                          z_loss: float = 0.0):
+    """Mean CE over (optionally masked) positions. logits fp32 [..., V]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    target_logit = jnp.take_along_axis(
+        logits, targets[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    ce = lse - target_logit
+    if z_loss:
+        ce = ce + z_loss * jnp.square(lse)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": param(ks[0], (d, f), ("w_embed", "ff"), pdtype(cfg)),
+            "w_up": param(ks[1], (d, f), ("w_embed", "ff"), pdtype(cfg)),
+            "w_down": param(ks[2], (f, d), ("ff", "w_embed"), pdtype(cfg)),
+        }
+    return {
+        "w_up": param(ks[0], (d, f), ("w_embed", "ff"), pdtype(cfg)),
+        "b_up": param(ks[1], (f,), ("ff",), pdtype(cfg), init="zeros"),
+        "w_down": param(ks[2], (f, d), ("ff", "w_embed"), pdtype(cfg)),
+        "b_down": param(ks[1], (d,), ("w_embed",), pdtype(cfg), init="zeros"),
+    }
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    dt = adtype(cfg)
+    x = x.astype(dt)
+    if cfg.mlp_kind == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+        up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+        h = jax.nn.silu(gate) * up
+        h = shard(h, "batch", "seq", "ff")
+        out = jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dt))
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+        h = jax.nn.gelu(h + params["b_up"].astype(dt))
+        h = shard(h, "batch", "seq", "ff")
+        out = jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dt))
+        out = out + params["b_down"].astype(dt)
+    # constrain the TP-boundary output directly to the sequence-parallel
+    # layout: XLA lowers the partial-sum + seq-shard pair to reduce-scatter
+    # instead of all-reduce + slice (half the wire bytes)
+    seq_ax = "seq_sp" if cfg.sequence_parallel else "seq"
+    return shard(out, "batch", seq_ax, "embed")

@@ -1,0 +1,62 @@
+"""Unified model interface: build_model(cfg) -> Model.
+
+Every family exposes:
+  init(key) -> Param tree
+  loss(params, batch) -> (scalar, metrics)          [train_* shapes]
+  prefill(params, batch) -> last-position logits    [prefill_* shapes]
+  decode_step(params, cache, tokens) -> (logits, cache)  [decode_* shapes]
+  init_cache(batch, seq_len) / cache_axes()
+plus `input_specs(shape)` producing ShapeDtypeStruct stand-ins + logical
+axes for the dry-run (no device allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import TransformerLM
+from repro.models.whisper import WhisperModel
+from repro.models.zamba import MambaLM, ZambaLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family == "encdec":
+        return WhisperModel(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return ZambaLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for every model input of this shape cell.
+
+    Returns (specs, logical_axes) trees. ``decode`` kinds describe only the
+    per-step token batch; the cache comes from eval_shape(init_cache).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    adt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        axes = {"tokens": ("cache_batch", None)}
+        return specs, axes
+
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    axes = {"tokens": ("batch", "seq")}
+    if shape.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+        axes["targets"] = ("batch", "seq")
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_frames, cfg.d_model), adt)
+        axes["frames"] = ("batch", "frames", None)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.vit_dim), adt)
+        axes["patch_embeds"] = ("batch", "patches", None)
+    return specs, axes

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts: token-choice top-k routing with capacity-based
+scatter/gather dispatch (Mixtral 8x top-2, DeepSeek-V2 64x top-6 + shared).
+
+Dispatch strategy (chosen for shardability at 256-512 chips):
+  * routing runs per batch row (positions via a k-step cumsum scan, O(B*S*E)
+    transient instead of the O(B*S*k*E) monolithic cumsum),
+  * tokens are gathered into a dense [B, E, C, D] expert batch
+    (= the paper's "gather" collective: concurrent reads from shared memory),
+  * expert FFNs run as batched einsums,
+  * outputs are combined back by weighted gather (= "multicast" writes).
+
+Sharding: the expert axis maps to the 'model' mesh axis when divisible
+(expert parallelism, DeepSeek 64/16=4); otherwise the capacity axis takes
+'model' (expert tensor parallelism, Mixtral 8<16) — resolved automatically
+by the logical-axis rules in models/common.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import adtype, param, pdtype, shard
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def expert_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    c = int(seq_len * cfg.experts_per_token * cfg.capacity_factor / cfg.num_experts)
+    c = max(_round_up(max(c, 1), 16), 16)
+    return min(c, _round_up(seq_len * cfg.experts_per_token, 16))
+
+
+def init_moe(key, cfg: ModelConfig):
+    d = cfg.d_model
+    f = cfg.d_ff_expert or cfg.d_ff
+    e = cfg.num_experts
+    ks = jax.random.split(key, 6)
+    # sub-expert sharding: store [E*k, d, f/k]; the f-slices of one expert
+    # are routed together and their down-proj partials sum in the combine
+    sub = max(cfg.moe_subexperts, 1)
+    assert f % sub == 0, (f, sub)
+    es, fs_ = e * sub, f // sub
+    p = {
+        "router": param(ks[0], (d, e), (None, "experts"), jnp.float32),
+        "w_gate": param(ks[1], (es, d, fs_), ("experts", "w_embed", "ff"), pdtype(cfg)),
+        "w_up": param(ks[2], (es, d, fs_), ("experts", "w_embed", "ff"), pdtype(cfg)),
+        "w_down": param(ks[3], (es, fs_, d), ("experts", "ff", "w_embed"), pdtype(cfg)),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": param(ks[4], (d, fs), ("w_embed", "ff"), pdtype(cfg)),
+            "w_up": param(ks[5], (d, fs), ("w_embed", "ff"), pdtype(cfg)),
+            "w_down": param(ks[4], (fs, d), ("ff", "w_embed"), pdtype(cfg)),
+        }
+    return p
+
+
+def _topk_routing(logits: jax.Array, cfg: ModelConfig):
+    """logits [B,S,E] -> (weights [B,S,K], idx [B,S,K], aux_loss)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    # Mixtral/DeepSeek renormalize the selected gates
+    weights = weights / jnp.maximum(jnp.sum(weights, -1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss
+    e = cfg.num_experts
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)
+    frac_tokens = jnp.mean(one_hot_top1, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return weights, idx, aux
+
+
+def _positions_in_expert(idx: jax.Array, e: int):
+    """Rank of each assignment within its expert, per batch row.
+
+    idx: [B,S,K] expert ids. Returns pos [B,S,K] (0-based arrival order,
+    priority: earlier token first, then lower k-slot). Computed with a scan
+    over the K slots to keep the one-hot cumsum transient at [B,S,E].
+    """
+    b, s, k = idx.shape
+
+    def slot_step(counts, slot_idx):
+        oh = jax.nn.one_hot(slot_idx, e, dtype=jnp.float32)   # [B,S,E]
+        within = jnp.cumsum(oh, axis=1) - oh                   # exclusive, [B,S,E]
+        pos = jnp.take_along_axis(within + counts[:, None, :],
+                                  slot_idx[..., None].astype(jnp.int32),
+                                  axis=-1)[..., 0]             # [B,S]
+        new_counts = counts + jnp.sum(oh, axis=1)              # [B,E]
+        return new_counts, pos
+
+    counts0 = jnp.zeros((b, e), jnp.float32)
+    _, pos = jax.lax.scan(slot_step, counts0, jnp.moveaxis(idx, -1, 0))
+    return jnp.moveaxis(pos, 0, -1).astype(jnp.int32)          # [B,S,K]
+
+
+def apply_moe(params, x, cfg: ModelConfig):
+    """x: [B,S,D] -> (y [B,S,D], aux_loss scalar)."""
+    dt = adtype(cfg)
+    x = shard(x, "batch", "seq", "embed")   # gather seq: routing is per-row
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = expert_capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    weights, idx, aux = _topk_routing(logits, cfg)
+
+    # expand to sub-experts: a token routed to expert e goes to sub-experts
+    # e*sub .. e*sub+sub-1 with the same gate weight; their partial outputs
+    # (down-proj f-slices) sum in the combine — mathematically identical
+    sub = max(cfg.moe_subexperts, 1)
+    if sub > 1:
+        e = e * sub
+        k = k * sub
+        idx = (idx[..., None] * sub
+               + jnp.arange(sub, dtype=idx.dtype)).reshape(b, s, k)
+        weights = jnp.repeat(weights, sub, axis=-1)
+
+    pos = _positions_in_expert(idx, e)                         # [B,S,K]
+    keep = pos < cap
+
+    # ---- dispatch: build [B,E,C] token indices (sentinel = S) -------------
+    tok = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :, None], (b, s, k))
+    b_idx = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None, None], (b, s, k))
+    slot = jnp.where(keep, pos, cap)                           # overflow -> slot C
+    dispatch = jnp.full((b, e, cap + 1), s, jnp.int32)
+    dispatch = dispatch.at[b_idx, idx, slot].set(tok)
+    dispatch = dispatch[:, :, :cap]                            # [B,E,C]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    x_e = jnp.take_along_axis(
+        x_pad[:, None], dispatch[..., None], axis=2)           # [B,E,C,D]
+    x_e = shard(x_e, "batch", "experts", "expert_cap", None)
+
+    # ---- expert FFN (swiglu) ---------------------------------------------
+    x_e = x_e.astype(dt)
+    gate = jnp.einsum("becd,edf->becf", x_e, params["w_gate"].astype(dt))
+    up = jnp.einsum("becd,edf->becf", x_e, params["w_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    h = shard(h, "batch", "experts", "expert_cap", None)
+    out_e = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(dt))
+    out_e = shard(out_e, "batch", "experts", "expert_cap", None)
+
+    # ---- combine: weighted gather back to token order ---------------------
+    flat = out_e.reshape(b, e * cap, d)
+    gidx = idx * cap + jnp.minimum(pos, cap - 1)               # [B,S,K]
+    out_tok = jnp.take_along_axis(
+        flat[:, :, :], gidx.reshape(b, s * k)[..., None], axis=1
+    ).reshape(b, s, k, d)
+    w = (weights * keep.astype(weights.dtype))[..., None].astype(jnp.float32)
+    y = jnp.sum(out_tok.astype(jnp.float32) * w, axis=2).astype(dt)
+
+    if "shared" in params:
+        sp = params["shared"]
+        g = jnp.einsum("bsd,df->bsf", x.astype(dt), sp["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x.astype(dt), sp["w_up"].astype(dt))
+        hs = shard(jax.nn.silu(g) * u, "batch", "seq", "ff")
+        y = y + jnp.einsum("bsf,fd->bsd", hs, sp["w_down"].astype(dt))
+
+    seq_ax = "seq_sp" if cfg.sequence_parallel else "seq"
+    return shard(y, "batch", seq_ax, "embed"), aux * cfg.router_aux_loss

@@ -1,0 +1,249 @@
+"""Mamba2 layer via SSD (state-space duality, arXiv:2405.21060).
+
+The chunked SSD algorithm decomposes the selective-state recurrence into
+  * intra-chunk attention-like matmuls (MXU-friendly),
+  * per-chunk boundary states,
+  * an inter-chunk linear recurrence — a textbook *systolic chain*: each
+    chunk's state flows to the next through a single link. We expose both a
+    sequential `lax.scan` chain (the faithful systolic reading) and an
+    `associative_scan` variant (log-depth, the shared-memory-style
+    alternative) selected by ``assoc_scan``.
+
+Sharding: SSM heads map to the 'model' axis; sequence/chunks to nothing
+(batch covers 'data'). The Pallas kernel twin lives in kernels/ssd.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import adtype, param, pdtype, shard
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    d_in_proj = 2 * d_inner + 2 * g * n + nheads
+    return {
+        "w_in": param(ks[0], (d, d_in_proj), ("w_embed", None), pdtype(cfg)),
+        "conv_w": param(ks[1], (cfg.ssm_conv_kernel, conv_dim), (None, "conv"),
+                        pdtype(cfg), scale=0.5),
+        "conv_b": param(ks[1], (conv_dim,), ("conv",), pdtype(cfg), init="zeros"),
+        "A_log": param(ks[2], (nheads,), ("ssm_heads",), jnp.float32, init="zeros"),
+        "D": param(ks[3], (nheads,), ("ssm_heads",), jnp.float32, init="ones"),
+        "dt_bias": param(ks[4], (nheads,), ("ssm_heads",), jnp.float32, init="zeros"),
+        "norm_scale": param(ks[5], (d_inner,), (None,), pdtype(cfg), init="ones"),
+        "w_out": param(ks[5], (d_inner, d), (None, "w_embed"), pdtype(cfg)),
+    }
+
+
+def _split_in_proj(zxbcdt, cfg: ModelConfig):
+    d_inner, nheads, _ = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    b = zxbcdt[..., 2 * d_inner:2 * d_inner + g * n]
+    c = zxbcdt[..., 2 * d_inner + g * n:2 * d_inner + 2 * g * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * g * n:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(x, w, bias):
+    """Depthwise causal conv1d. x: [B,S,C]; w: [K,C] -> silu(conv(x))."""
+    k = w.shape[0]
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        y = y + xs * w[i][None, None, :]
+    return jax.nn.silu(y + bias[None, None, :])
+
+
+def _segsum_decay(cum: jax.Array) -> jax.Array:
+    """exp(cum[t]-cum[s]) for s<=t else 0. cum: [..., L, H] -> [..., H, L, L]."""
+    l = cum.shape[-2]
+    diff = cum[..., :, None, :] - cum[..., None, :, :]        # [..., L, L, H]
+    diff = jnp.moveaxis(diff, -1, -3)                          # [..., H, L, L]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, B, C, D, cfg: ModelConfig, assoc_scan: bool = False,
+                initial_state=None, return_final_state: bool = False):
+    """Chunked SSD scan.
+
+    x: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    B, C: [B,S,G,N]. Returns y [B,S,H,P] (+ final state [B,H,P,N]).
+    """
+    bsz, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    l = min(cfg.ssm_chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, l, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, l, h)
+    Bf = B.astype(jnp.float32).reshape(bsz, nc, l, g, n)
+    Cf = C.astype(jnp.float32).reshape(bsz, nc, l, g, n)
+    dA = dtf * A[None, None, None, :]                          # [B,Nc,L,H]
+    cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (attention-like): M = (C.B^T) ∘ decay ∘ dt
+    CB = jnp.einsum("bclgn,bcsgn->bcgls", Cf, Bf)              # [B,Nc,G,L,L]
+    decay = _segsum_decay(cum)                                 # [B,Nc,H,L,L]
+    CB = jnp.repeat(CB, rep, axis=2) if rep > 1 else CB
+    dt_s = jnp.moveaxis(dtf, -1, 2)[:, :, :, None, :]          # [B,Nc,H,1,L]
+    M = CB * decay * dt_s                                      # dt at source s
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", M, xf)
+    y_intra = shard(y_intra, "batch", None, None, "ssm_heads", None)
+
+    # chunk boundary states: S_c = sum_s exp(cum[-1]-cum[s]) dt[s] x[s] B[s]^T
+    decay_last = jnp.exp(cum[:, :, -1:, :] - cum)              # [B,Nc,L,H]
+    Bh = jnp.repeat(Bf, rep, axis=3) if rep > 1 else Bf        # [B,Nc,L,H,N]
+    S_c = jnp.einsum("bclh,bclhn,bclhp->bchpn",
+                     decay_last * dtf, Bh, xf)                 # [B,Nc,H,P,N]
+    S_c = shard(S_c, "batch", None, "ssm_heads", None, None)
+
+    # inter-chunk recurrence — the systolic chain
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # [B,Nc,H]
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    if assoc_scan:
+        # (a, s) pairs under ((a1,s1)*(a2,s2) = (a1*a2, s1*a2 + s2))
+        def combine(e1, e2):
+            a1, s1 = e1
+            a2, s2 = e2
+            return a1 * a2, s1 * a2[..., None, None] + s2
+        a_seq = jnp.moveaxis(chunk_decay, 1, 0)                # [Nc,B,H]
+        s_seq = jnp.moveaxis(S_c, 1, 0)                        # [Nc,B,H,P,N]
+        s_seq = s_seq.at[0].add(initial_state * a_seq[0][..., None, None])
+        a_out, s_out = jax.lax.associative_scan(combine, (a_seq, s_seq), axis=0)
+        # states *entering* chunk c = scanned state of c-1 (prepend init)
+        entering = jnp.concatenate(
+            [initial_state[None], s_out[:-1]], axis=0)         # [Nc,B,H,P,N]
+        entering = jnp.moveaxis(entering, 0, 1)
+        final_state = s_out[-1]
+    else:
+        def chain(prev, inputs):
+            a_c, s_new = inputs
+            entering = prev
+            nxt = prev * a_c[..., None, None] + s_new
+            return nxt, entering
+        final_state, entering = jax.lax.scan(
+            chain, initial_state,
+            (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_c, 1, 0)))
+        entering = jnp.moveaxis(entering, 0, 1)                # [B,Nc,H,P,N]
+
+    Ch = jnp.repeat(Cf, rep, axis=3) if rep > 1 else Cf
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp", Ch, entering, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    if return_final_state:
+        return y, final_state
+    return y
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, assoc_scan: bool = False):
+    """Full-sequence Mamba2 layer. x: [B,S,D] -> [B,S,D]."""
+    dt_ = adtype(cfg)
+    bsz, s, _ = x.shape
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x.astype(dt_), params["w_in"].astype(dt_))
+    z, xc, b, c, dtp = _split_in_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([xc, b, c], axis=-1)
+    xbc = _causal_conv(xbc, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_))
+    xc, b, c = (xbc[..., :d_inner],
+                xbc[..., d_inner:d_inner + g * n],
+                xbc[..., d_inner + g * n:])
+    xh = xc.reshape(bsz, s, nheads, cfg.ssm_headdim)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xh, dt, A,
+                    b.reshape(bsz, s, g, n), c.reshape(bsz, s, g, n),
+                    params["D"].astype(jnp.float32), cfg, assoc_scan=assoc_scan)
+    y = y.reshape(bsz, s, d_inner).astype(dt_)
+    # gated RMSNorm (mamba2 places the gate inside the norm)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", yf.astype(dt_), params["w_out"].astype(dt_))
+    return shard(out, "batch", "seq_sp" if cfg.sequence_parallel else "seq",
+                 "embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-step recurrence)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int):
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_kernel - 1, conv_dim), adtype(cfg)),
+        "state": jnp.zeros((batch, nheads, cfg.ssm_headdim, cfg.ssm_state),
+                           jnp.float32),
+    }
+
+
+MAMBA2_CACHE_AXES = {
+    "conv": ("cache_batch", None, "conv"),
+    "state": ("cache_batch", "ssm_heads", None, None),
+}
+
+
+def mamba2_decode(params, x, cache, cfg: ModelConfig, active=None):
+    """One-token step. x: [B,1,D] -> (y [B,1,D], new cache). Rows with
+    active=False keep their conv/ssm state unchanged."""
+    dt_ = adtype(cfg)
+    bsz = x.shape[0]
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x.astype(dt_), params["w_in"].astype(dt_))
+    z, xc, b, c, dtp = _split_in_proj(zxbcdt, cfg)
+    xbc_new = jnp.concatenate([xc, b, c], axis=-1)             # [B,1,conv_dim]
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # [B,K,conv_dim]
+    w = params["conv_w"].astype(dt_)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(dt_)
+    xbc = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:]
+
+    xc_, b_, c_ = (xbc[..., :d_inner],
+                   xbc[..., d_inner:d_inner + g * n],
+                   xbc[..., d_inner + g * n:])
+    xh = xc_.reshape(bsz, nheads, cfg.ssm_headdim)
+    dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + params["dt_bias"][None])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None])                                 # [B,H]
+    bh = jnp.repeat(b_.reshape(bsz, g, n), nheads // g, axis=1)
+    ch = jnp.repeat(c_.reshape(bsz, g, n), nheads // g, axis=1)
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh.astype(jnp.float32), bh.astype(jnp.float32))
+    if active is not None:
+        keep = active[:, None, None, None]
+        state = jnp.where(keep, state, cache["state"])
+        new_conv = jnp.where(active[:, None, None], new_conv, cache["conv"])
+    state = shard(state, "cache_batch", "ssm_heads", None, None)
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner)
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", yf.astype(dt_), params["w_out"].astype(dt_))
+    return out, {"conv": new_conv, "state": state}

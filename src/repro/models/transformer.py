@@ -1,0 +1,271 @@
+"""Decoder-only transformer LM: granite / qwen3 / olmo backbones, the
+Mixtral & DeepSeek MoE variants, and the InternVL2 VLM fusion.
+
+Layers are scanned (stacked params, O(1) HLO in depth) with remat applied to
+the block body per ``cfg.remat``. MoE models scan the homogeneous MoE stack
+and run the ``first_k_dense`` leading layers explicitly (DeepSeek-V2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.common import (
+    adtype,
+    shard_residual,
+    apply_mlp,
+    apply_norm,
+    embed,
+    init_embedding,
+    init_lm_head,
+    init_mlp,
+    init_norm,
+    lm_logits,
+    lm_loss_chunked,
+    param,
+    pdtype,
+    shard,
+    stack_init,
+)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "selective":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, moe_layer: bool = False):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {
+        "norm1": init_norm(ks[0], cfg),
+        "norm2": init_norm(ks[1], cfg),
+    }
+    if cfg.attention_type == "mla":
+        p["attn"] = attn.init_mla(ks[2], cfg)
+    else:
+        p["attn"] = attn.init_gqa(ks[2], cfg)
+    if moe_layer:
+        p["moe"] = moe_lib.init_moe(ks[3], cfg)
+    else:
+        d_ff = cfg.d_ff_dense if (cfg.family == "moe" and cfg.d_ff_dense) else cfg.d_ff
+        p["mlp"] = init_mlp(ks[3], cfg, d_ff=d_ff)
+    return p
+
+
+def _maybe_systolic_mlp(lp_mlp, h, cfg: ModelConfig):
+    """Route the FFN through the paper's ring schedules when enabled.
+
+    cfg.systolic_mode in {sw, xqueue, qlr} + an active mesh context + shapes
+    that divide -> systolic sequence-parallel SwiGLU (AG-ring in, RS-ring
+    out); otherwise the baseline einsum path.
+    """
+    from repro.models.common import current_ctx
+    ctx = current_ctx()
+    if (cfg.systolic_mode != "baseline" and cfg.mlp_kind == "swiglu"
+            and ctx is not None):
+        from repro.core import collective_matmul as cm
+        if cm.ffn_applicable(h, lp_mlp["w_gate"].shape[-1], ctx.mesh):
+            dt = adtype(cfg)
+            return cm.systolic_ffn(
+                h.astype(dt), lp_mlp["w_gate"].astype(dt),
+                lp_mlp["w_up"].astype(dt), lp_mlp["w_down"].astype(dt),
+                mesh=ctx.mesh, mode=cfg.systolic_mode)
+    return apply_mlp(lp_mlp, h, cfg)
+
+
+def block_forward(lp, x, cfg: ModelConfig, moe_layer: bool = False):
+    """Returns (x, aux_loss)."""
+    h = apply_norm(lp["norm1"], x, cfg)
+    if cfg.attention_type == "mla":
+        a = attn.mla_forward(lp["attn"], h, cfg)
+    else:
+        a = attn.gqa_forward(lp["attn"], h, cfg)
+    x = x + a
+    h = apply_norm(lp["norm2"], x, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if moe_layer:
+        y, aux = moe_lib.apply_moe(lp["moe"], h, cfg)
+    else:
+        y = _maybe_systolic_mlp(lp["mlp"], h, cfg)
+    return shard_residual(x + y, cfg), aux
+
+
+def block_decode(lp, x, cache, cfg: ModelConfig, moe_layer: bool = False,
+                 active=None):
+    h = apply_norm(lp["norm1"], x, cfg)
+    if cfg.attention_type == "mla":
+        a, cache = attn.mla_decode(lp["attn"], h, cache, cfg, active=active)
+    else:
+        a, cache = attn.gqa_decode(lp["attn"], h, cache, cfg, active=active)
+    x = x + a
+    h = apply_norm(lp["norm2"], x, cfg)
+    if moe_layer:
+        y, _ = moe_lib.apply_moe(lp["moe"], h, cfg)
+    else:
+        y = apply_mlp(lp["mlp"], h, cfg)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class TransformerLM:
+    """granite / qwen3 / olmo / mixtral / deepseek / internvl backbone."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_scanned = cfg.num_layers - cfg.first_k_dense
+        self.moe = cfg.family == "moe"
+
+    # ------------------------------------------------------------- params
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        p: dict[str, Any] = {
+            "embed": init_embedding(ks[0], cfg),
+            "final_norm": init_norm(ks[1], cfg),
+            "head": init_lm_head(ks[2], cfg),
+            "layers": stack_init(
+                lambda k: init_block(k, cfg, moe_layer=self.moe), ks[3],
+                self.n_scanned),
+        }
+        if cfg.first_k_dense:
+            p["dense_layers"] = stack_init(
+                lambda k: init_block(k, cfg, moe_layer=False), ks[4],
+                cfg.first_k_dense)
+        if cfg.family == "vlm":
+            kp = jax.random.split(ks[5], 3)
+            p["projector"] = {
+                "w1": param(kp[0], (cfg.vit_dim, cfg.d_model), (None, "w_embed"),
+                            pdtype(cfg)),
+                "w2": param(kp[1], (cfg.d_model, cfg.d_model), ("w_embed", None),
+                            pdtype(cfg)),
+                "norm": init_norm(kp[2], cfg, d=cfg.vit_dim),
+            }
+        return p
+
+    # ------------------------------------------------------------- forward
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"], cfg)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(adtype(cfg))
+            pe = apply_norm(params["projector"]["norm"], pe, cfg)
+            pe = jnp.einsum("bpv,vd->bpd", pe,
+                            params["projector"]["w1"].astype(adtype(cfg)))
+            pe = jax.nn.gelu(pe)
+            pe = jnp.einsum("bpd,de->bpe", pe,
+                            params["projector"]["w2"].astype(adtype(cfg)))
+            # image tokens occupy the sequence prefix (stub fusion)
+            np_ = min(pe.shape[1], x.shape[1])
+            x = jax.lax.dynamic_update_slice_in_dim(x, pe[:, :np_], 0, axis=1)
+            x = shard(x, "batch", "seq", "embed")
+        return x
+
+    def hidden_states(self, params, batch):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if cfg.first_k_dense:
+            def dense_body(x, lp):
+                y, aux = block_forward(lp, x, cfg, moe_layer=False)
+                return y, aux
+            dense_body = _remat(dense_body, cfg)
+            x, auxs = jax.lax.scan(dense_body, x, params["dense_layers"])
+            aux_total = aux_total + jnp.sum(auxs)
+
+        def body(x, lp):
+            y, aux = block_forward(lp, x, cfg, moe_layer=self.moe)
+            return y, aux
+        body = _remat(body, cfg)
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        aux_total = aux_total + jnp.sum(auxs)
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, aux_total
+
+    def loss(self, params, batch):
+        x, aux = self.hidden_states(params, batch)
+        mask = batch.get("mask")
+        ce = lm_loss_chunked(params.get("head", {}), params["embed"], x,
+                             batch["targets"], self.cfg, mask=mask)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch):
+        """Forward pass returning last-position logits (inference prefill)."""
+        x, _ = self.hidden_states(params, batch)
+        logits = lm_logits(params.get("head", {}), params["embed"],
+                           x[:, -1:], self.cfg)
+        return logits[:, 0]
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        if cfg.attention_type == "mla":
+            one = lambda: attn.init_mla_cache(cfg, batch, seq_len)
+        else:
+            one = lambda: attn.init_gqa_cache(cfg, batch, seq_len)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[one() for _ in range(self.n_scanned)])
+        cache = {"layers": stacked}
+        if cfg.first_k_dense:
+            cache["dense_layers"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[one() for _ in range(cfg.first_k_dense)])
+        return cache
+
+    def cache_axes(self):
+        cfg = self.cfg
+        axes = (attn.MLA_CACHE_AXES if cfg.attention_type == "mla"
+                else attn.GQA_CACHE_AXES)
+        padded = {k: (None,) + tuple(v) for k, v in axes.items()}
+        out = {"layers": dict(padded)}
+        if cfg.first_k_dense:
+            out["dense_layers"] = dict(padded)
+        return out
+
+    def decode_step(self, params, cache, tokens, active=None):
+        """tokens: [B,1] -> (logits [B,V], new cache). ``active`` [B] masks
+        rows that should not consume a step (continuous batching)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        new_cache = dict(cache)
+
+        if cfg.first_k_dense:
+            def dbody(x, inp):
+                lp, c = inp
+                y, c2 = block_decode(lp, x, c, cfg, moe_layer=False,
+                                     active=active)
+                return y, c2
+            x, new_dense = jax.lax.scan(
+                dbody, x, (params["dense_layers"], cache["dense_layers"]))
+            new_cache["dense_layers"] = new_dense
+
+        def body(x, inp):
+            lp, c = inp
+            y, c2 = block_decode(lp, x, c, cfg, moe_layer=self.moe,
+                                 active=active)
+            return y, c2
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = new_layers
+
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)
+        return logits[:, 0], new_cache

@@ -1,0 +1,201 @@
+"""Whisper-tiny encoder-decoder. The conv/mel audio frontend is a STUB per
+the assignment: ``input_specs()`` provides precomputed frame embeddings
+[B, enc_frames, d_model]; the model owns sinusoidal positions, the encoder
+stack, and the decoder with self- + cross-attention.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    adtype,
+    shard_residual,
+    apply_mlp,
+    apply_norm,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    lm_logits,
+    lm_loss_chunked,
+    param,
+    pdtype,
+    shard,
+    sinusoidal_positions,
+    stack_init,
+)
+
+
+def _remat(fn, cfg: ModelConfig):
+    return fn if cfg.remat == "none" else jax.checkpoint(fn)
+
+
+def init_enc_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": init_norm(ks[0], cfg),
+        "attn": attn.init_gqa(ks[1], cfg),
+        "norm2": init_norm(ks[2], cfg),
+        "mlp": init_mlp(ks[2], cfg),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    return {
+        "norm1": init_norm(ks[0], cfg),
+        "self_attn": attn.init_gqa(ks[1], cfg),
+        "norm_x": init_norm(ks[2], cfg),
+        "cross_attn": attn.init_cross_attention(ks[3], cfg),
+        "norm2": init_norm(ks[4], cfg),
+        "mlp": init_mlp(ks[4], cfg),
+    }
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 7)
+        return {
+            "embed": init_embedding(ks[0], cfg),              # decoder tokens
+            "head": {"w": param(ks[1], (cfg.d_model, cfg.vocab_size),
+                                ("w_embed", "vocab"), pdtype(cfg))},
+            "enc_layers": stack_init(lambda k: init_enc_block(k, cfg), ks[2],
+                                     cfg.enc_layers),
+            "enc_norm": init_norm(ks[3], cfg),
+            "dec_layers": stack_init(lambda k: init_dec_block(k, cfg), ks[4],
+                                     cfg.num_layers),
+            "dec_norm": init_norm(ks[5], cfg),
+            "dec_pos": param(ks[6], (cfg.max_target_positions, cfg.d_model),
+                             (None, "w_embed"), pdtype(cfg), scale=0.02),
+        }
+
+    # -------------------------------------------------------------- encoder
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(adtype(cfg))
+        pos = sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        x = x + pos[None]
+        x = shard(x, "batch", "seq", "embed")
+
+        # bidirectional attention: reuse gqa qkv path with causal=False
+        def enc_body(x, lp):
+            h = apply_norm(lp["norm1"], x, cfg)
+            q, k, v = attn._qkv(lp["attn"], h, cfg, positions=None)
+            o = attn.plain_attention(q, k, v, causal=False)
+            o = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype),
+                           lp["attn"]["wo"].astype(x.dtype))
+            x = x + o
+            h = apply_norm(lp["norm2"], x, cfg)
+            x = shard_residual(x + apply_mlp(lp["mlp"], h, cfg), cfg)
+            return x, None
+
+        enc_body = _remat(enc_body, cfg)
+        x, _ = jax.lax.scan(enc_body, x, params["enc_layers"])
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    # -------------------------------------------------------------- decoder
+    def _dec_embed(self, params, tokens, pos_offset=0):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        s = tokens.shape[1]
+        table = params["dec_pos"].astype(x.dtype)
+        if isinstance(pos_offset, int) and pos_offset == 0:
+            idx = jnp.arange(s) % cfg.max_target_positions
+            x = x + table[idx][None]
+        else:
+            # pos_offset: [B] per-row decode positions
+            idx = (pos_offset[:, None] + jnp.arange(s)[None]) \
+                % cfg.max_target_positions
+            x = x + jnp.take(table, idx, axis=0)
+        return x
+
+    def decode_stack(self, params, tokens, memory):
+        cfg = self.cfg
+        x = self._dec_embed(params, tokens)
+
+        def body(x, lp):
+            h = apply_norm(lp["norm1"], x, cfg)
+            x = x + attn.gqa_forward(lp["self_attn"], h, cfg)
+            h = apply_norm(lp["norm_x"], x, cfg)
+            k, v = attn.cross_kv(lp["cross_attn"], memory, cfg)
+            x = x + attn.cross_attend(lp["cross_attn"], h, k, v, cfg)
+            h = apply_norm(lp["norm2"], x, cfg)
+            x = shard_residual(x + apply_mlp(lp["mlp"], h, cfg), cfg)
+            return x, None
+
+        body = _remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        return apply_norm(params["dec_norm"], x, cfg)
+
+    # ------------------------------------------------------------- training
+    def loss(self, params, batch):
+        memory = self.encode(params, batch["frames"])
+        x = self.decode_stack(params, batch["tokens"], memory)
+        ce = lm_loss_chunked(params["head"], params["embed"], x,
+                             batch["targets"], self.cfg,
+                             mask=batch.get("mask"))
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        memory = self.encode(params, batch["frames"])
+        x = self.decode_stack(params, batch["tokens"], memory)
+        logits = lm_logits(params["head"], params["embed"], x[:, -1:], self.cfg)
+        return logits[:, 0]
+
+    # --------------------------------------------------------------- decode
+    def init_cache(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        one = lambda: attn.init_gqa_cache(cfg, batch, seq_len)
+        self_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.num_layers)])
+        hd = cfg.resolved_head_dim
+        cross = jnp.zeros((cfg.num_layers, batch, cfg.enc_frames,
+                           cfg.num_kv_heads, hd), adtype(cfg))
+        return {"self": self_cache, "cross_k": cross, "cross_v": cross}
+
+    def cache_axes(self):
+        padded = {k: (None,) + tuple(v) for k, v in attn.GQA_CACHE_AXES.items()}
+        cross_axes = (None, "cache_batch", "frames", "kv_heads", "head_dim")
+        return {"self": padded, "cross_k": cross_axes, "cross_v": cross_axes}
+
+    def fill_cross_cache(self, params, cache, memory):
+        """Populate cross-KV from encoder output (once per request)."""
+        cfg = self.cfg
+        ks, vs = [], []
+        # vmapped over stacked layer params
+        def one(lp):
+            return attn.cross_kv(lp["cross_attn"], memory, cfg)
+        k, v = jax.vmap(one, in_axes=(0,))(params["dec_layers"])
+        return {**cache, "cross_k": k, "cross_v": v}
+
+    def decode_step(self, params, cache, tokens, active=None):
+        cfg = self.cfg
+        pos = cache["self"]["pos"]                 # stacked per-row pos [L,B]
+        x = self._dec_embed(params, tokens, pos_offset=pos[0])
+
+        def body(x, inp):
+            lp, c, ck, cv = inp
+            h = apply_norm(lp["norm1"], x, cfg)
+            a, c2 = attn.gqa_decode(lp["self_attn"], h, c, cfg, active=active)
+            x = x + a
+            h = apply_norm(lp["norm_x"], x, cfg)
+            x = x + attn.cross_attend(lp["cross_attn"], h, ck, cv, cfg)
+            h = apply_norm(lp["norm2"], x, cfg)
+            x = x + apply_mlp(lp["mlp"], h, cfg)
+            return x, c2
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self"],
+                      cache["cross_k"], cache["cross_v"]))
+        x = apply_norm(params["dec_norm"], x, cfg)
+        logits = lm_logits(params["head"], params["embed"], x, cfg)
+        return logits[:, 0], {**cache, "self": new_self}

@@ -1,0 +1,285 @@
+"""Mamba2 LM (mamba2-1.3b) and the Zamba2 hybrid (zamba2-1.2b).
+
+Zamba2 structure (simplified faithfully — see DESIGN.md): a Mamba2 backbone
+of ``num_layers`` blocks where ONE shared transformer block (full MHA +
+MLP, parameters reused across invocations) runs before every ``attn_every``
+mamba layers, modulated by small per-invocation low-rank adapters. We scan
+``n_super = n_shared_attn`` super-blocks of [shared-attn -> attn_every
+mamba layers] plus an explicit tail of remaining mamba layers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.common import (
+    adtype,
+    shard_residual,
+    apply_mlp,
+    apply_norm,
+    embed,
+    init_embedding,
+    init_lm_head,
+    init_mlp,
+    init_norm,
+    lm_logits,
+    lm_loss_chunked,
+    param,
+    pdtype,
+    shard,
+    stack_init,
+)
+
+
+def _remat(fn, cfg: ModelConfig):
+    return fn if cfg.remat == "none" else jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Pure Mamba2 LM
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"norm": init_norm(k1, cfg), "mixer": ssm.init_mamba2(k2, cfg)}
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        return {
+            "embed": init_embedding(ks[0], cfg),
+            "final_norm": init_norm(ks[1], cfg),
+            "head": init_lm_head(ks[2], cfg),
+            "layers": stack_init(lambda k: init_mamba_block(k, cfg), ks[3],
+                                 cfg.num_layers),
+        }
+
+    def hidden_states(self, params, batch):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"], cfg)
+
+        def body(x, lp):
+            h = apply_norm(lp["norm"], x, cfg)
+            return shard_residual(x + ssm.mamba2_forward(lp["mixer"], h, cfg), cfg), None
+
+        body = _remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return apply_norm(params["final_norm"], x, cfg)
+
+    def loss(self, params, batch):
+        x = self.hidden_states(params, batch)
+        ce = lm_loss_chunked(params.get("head", {}), params["embed"], x,
+                             batch["targets"], self.cfg, mask=batch.get("mask"))
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        x = self.hidden_states(params, batch)
+        logits = lm_logits(params.get("head", {}), params["embed"],
+                           x[:, -1:], self.cfg)
+        return logits[:, 0]
+
+    def init_cache(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        one = lambda: ssm.init_mamba2_cache(cfg, batch)
+        return {
+            "layers": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[one() for _ in range(cfg.num_layers)]),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_axes(self):
+        padded = {k: (None,) + tuple(v) for k, v in ssm.MAMBA2_CACHE_AXES.items()}
+        return {"layers": padded, "pos": ()}
+
+    def decode_step(self, params, cache, tokens, active=None):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+
+        def body(x, inp):
+            lp, c = inp
+            h = apply_norm(lp["norm"], x, cfg)
+            y, c2 = ssm.mamba2_decode(lp["mixer"], h, c, cfg, active=active)
+            return x + y, c2
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)
+        return logits[:, 0], {"layers": new_layers, "pos": cache["pos"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+
+def init_shared_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": init_norm(ks[0], cfg),
+        "attn": attn.init_gqa(ks[1], cfg),
+        "norm2": init_norm(ks[2], cfg),
+        "mlp": init_mlp(ks[3], cfg),
+    }
+
+
+def init_adapter(key, cfg: ModelConfig, rank: int = 64):
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": param(k1, (cfg.d_model, rank), ("w_embed", "lora"), pdtype(cfg)),
+        "b": param(k2, (rank, cfg.d_model), ("lora", "w_embed"), pdtype(cfg),
+                   init="zeros"),
+    }
+
+
+class ZambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_super = cfg.n_shared_attn
+        self.inner = cfg.attn_every
+        self.n_tail = cfg.num_layers - self.n_super * self.inner
+        assert self.n_tail >= 0, "num_layers < n_shared_attn * attn_every"
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 7)
+        p: dict[str, Any] = {
+            "embed": init_embedding(ks[0], cfg),
+            "final_norm": init_norm(ks[1], cfg),
+            "head": init_lm_head(ks[2], cfg),
+            "shared": init_shared_block(ks[3], cfg),
+            "adapters": stack_init(lambda k: init_adapter(k, cfg), ks[4],
+                                   self.n_super),
+            "mamba": stack_init(
+                lambda k: stack_init(
+                    lambda k2: init_mamba_block(k2, cfg), k, self.inner),
+                ks[5], self.n_super),
+        }
+        if self.n_tail:
+            p["tail"] = stack_init(lambda k: init_mamba_block(k, cfg), ks[6],
+                                   self.n_tail)
+        return p
+
+    def _shared_attn(self, shared, adapter, x):
+        cfg = self.cfg
+        dt = adtype(cfg)
+        h = apply_norm(shared["norm1"], x, cfg)
+        # per-invocation low-rank modulation of the shared block input
+        mod = jnp.einsum("bsd,dr->bsr", h.astype(dt), adapter["a"].astype(dt))
+        h = h + jnp.einsum("bsr,rd->bsd", mod, adapter["b"].astype(dt))
+        x = x + attn.gqa_forward(shared["attn"], h, cfg)
+        h = apply_norm(shared["norm2"], x, cfg)
+        return shard_residual(x + apply_mlp(shared["mlp"], h, cfg), cfg)
+
+    def hidden_states(self, params, batch):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"], cfg)
+        shared = params["shared"]
+
+        def mamba_body(x, lp):
+            h = apply_norm(lp["norm"], x, cfg)
+            return shard_residual(x + ssm.mamba2_forward(lp["mixer"], h, cfg), cfg), None
+
+        mamba_body = _remat(mamba_body, cfg)
+
+        def super_body(x, inp):
+            adapter, mamba_stack = inp
+            x = self._shared_attn(shared, adapter, x)
+            x, _ = jax.lax.scan(mamba_body, x, mamba_stack)
+            return x, None
+
+        super_body = _remat(super_body, cfg) if cfg.remat != "none" else super_body
+        x, _ = jax.lax.scan(super_body, x, (params["adapters"], params["mamba"]))
+        if self.n_tail:
+            x, _ = jax.lax.scan(mamba_body, x, params["tail"])
+        return apply_norm(params["final_norm"], x, cfg)
+
+    def loss(self, params, batch):
+        x = self.hidden_states(params, batch)
+        ce = lm_loss_chunked(params.get("head", {}), params["embed"], x,
+                             batch["targets"], self.cfg, mask=batch.get("mask"))
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        x = self.hidden_states(params, batch)
+        logits = lm_logits(params.get("head", {}), params["embed"],
+                           x[:, -1:], self.cfg)
+        return logits[:, 0]
+
+    # --------------------------------------------------------------- decode
+    def init_cache(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        m_one = lambda: ssm.init_mamba2_cache(cfg, batch)
+        a_one = lambda: attn.init_gqa_cache(cfg, batch, seq_len)
+        stack = lambda mk, n: jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[mk() for _ in range(n)])
+        cache = {
+            "mamba": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[stack(m_one, self.inner) for _ in range(self.n_super)]),
+            "attn": stack(a_one, self.n_super),
+        }
+        if self.n_tail:
+            cache["tail"] = stack(m_one, self.n_tail)
+        return cache
+
+    def cache_axes(self):
+        m_axes = {k: (None, None) + tuple(v)
+                  for k, v in ssm.MAMBA2_CACHE_AXES.items()}
+        m_tail = {k: (None,) + tuple(v)
+                  for k, v in ssm.MAMBA2_CACHE_AXES.items()}
+        a_axes = {k: (None,) + tuple(v) for k, v in attn.GQA_CACHE_AXES.items()}
+        out = {"mamba": m_axes, "attn": a_axes}
+        if self.n_tail:
+            out["tail"] = m_tail
+        return out
+
+    def decode_step(self, params, cache, tokens, active=None):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        shared = params["shared"]
+
+        def mamba_step(x, inp):
+            lp, c = inp
+            h = apply_norm(lp["norm"], x, cfg)
+            y, c2 = ssm.mamba2_decode(lp["mixer"], h, c, cfg, active=active)
+            return x + y, c2
+
+        def shared_step(shared, adapter, x, c):
+            dt = adtype(cfg)
+            h = apply_norm(shared["norm1"], x, cfg)
+            mod = jnp.einsum("bsd,dr->bsr", h.astype(dt), adapter["a"].astype(dt))
+            h = h + jnp.einsum("bsr,rd->bsd", mod, adapter["b"].astype(dt))
+            a, c2 = attn.gqa_decode(shared["attn"], h, c, cfg, active=active)
+            x = x + a
+            h = apply_norm(shared["norm2"], x, cfg)
+            return x + apply_mlp(shared["mlp"], h, cfg), c2
+
+        def super_step(x, inp):
+            adapter, mamba_stack, a_cache, m_caches = inp
+            x, a2 = shared_step(shared, adapter, x, a_cache)
+            x, m2 = jax.lax.scan(mamba_step, x, (mamba_stack, m_caches))
+            return x, (a2, m2)
+
+        x, (new_attn, new_mamba) = jax.lax.scan(
+            super_step, x,
+            (params["adapters"], params["mamba"], cache["attn"], cache["mamba"]))
+        new_cache = {"mamba": new_mamba, "attn": new_attn}
+        if self.n_tail:
+            x, new_tail = jax.lax.scan(
+                mamba_step, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)
+        return logits[:, 0], new_cache

@@ -1,0 +1,128 @@
+"""Batched serving engine with continuous batching.
+
+Slot-based scheduler over one jitted decode step: a fixed decode batch of
+``max_batch`` rows; each row is a slot with its own cache position (the
+per-row ``pos`` in the model caches). Incoming requests stream their prompt
+tokens through the shared step (chunk-less prefill) while other slots keep
+decoding — the ``active`` row mask keeps inactive slots' caches frozen.
+Finished rows free their slot immediately. The decode-shape dry-run cells
+lower exactly this step function at production size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import build_model
+from repro.serve.sample import sample
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # [P] token ids
+    max_new_tokens: int = 16
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.model = build_model(cfg)
+        self.max_batch = scfg.max_batch
+        self.max_seq = scfg.max_seq_len
+        self.cache = self.model.init_cache(self.max_batch, self.max_seq)
+        self.key = jax.random.PRNGKey(scfg.seed)
+        self._decode = jax.jit(self.model.decode_step)
+        self._next_rid = 0
+        self.pending: list[Request] = []
+        # slot bookkeeping (host side)
+        self.slot_req: list[Optional[Request]] = [None] * self.max_batch
+        self.slot_prompt_left: np.ndarray = np.zeros(self.max_batch, np.int64)
+        self.slot_new_left: np.ndarray = np.zeros(self.max_batch, np.int64)
+        self._zero_row = jax.jit(self._make_zero_row())
+
+    def _make_zero_row(self):
+        def zero_row(cache, row):
+            def z(leaf):
+                # per-row state: zero everything indexed by the batch dim.
+                # Caches are laid out [layers, batch, ...] or [batch, ...];
+                # leaves whose shape contains max_batch at dim 0 or 1.
+                if leaf.ndim >= 1 and leaf.shape[0] == self.max_batch:
+                    return leaf.at[row].set(jnp.zeros_like(leaf[row]))
+                if leaf.ndim >= 2 and leaf.shape[1] == self.max_batch:
+                    return leaf.at[:, row].set(jnp.zeros_like(leaf[:, row]))
+                return leaf
+            return jax.tree_util.tree_map(z, cache)
+        return zero_row
+
+    # ------------------------------------------------------------- client
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(Request(rid, np.asarray(prompt, np.int32),
+                                    max_new_tokens))
+        return rid
+
+    # ---------------------------------------------------------- scheduler
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            self.slot_req[slot] = req
+            self.slot_prompt_left[slot] = len(req.prompt)
+            self.slot_new_left[slot] = req.max_new_tokens
+            self.cache = self._zero_row(self.cache, slot)
+
+    def step(self):
+        """One engine tick = one jitted decode step for all slots."""
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        active = np.zeros(self.max_batch, bool)
+        sampling = np.zeros(self.max_batch, bool)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            active[slot] = True
+            if self.slot_prompt_left[slot] > 0:
+                # stream the next prompt token (prefill-in-decode)
+                idx = len(req.prompt) - self.slot_prompt_left[slot]
+                tokens[slot, 0] = req.prompt[idx]
+                self.slot_prompt_left[slot] -= 1
+                sampling[slot] = self.slot_prompt_left[slot] == 0
+            else:
+                tokens[slot, 0] = req.out_tokens[-1]
+                sampling[slot] = True
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(active))
+        self.key, sub = jax.random.split(self.key)
+        next_tok = np.asarray(sample(logits, sub, self.scfg.temperature,
+                                     self.scfg.top_k))
+        for slot, req in enumerate(self.slot_req):
+            if req is None or not sampling[slot]:
+                continue
+            req.out_tokens.append(int(next_tok[slot]))
+            self.slot_new_left[slot] -= 1
+            if self.slot_new_left[slot] <= 0:
+                req.done = True
+                self.slot_req[slot] = None
+
+    def run(self, max_ticks: int = 10_000) -> int:
+        """Drive until all submitted requests complete. Returns #ticks."""
+        ticks = 0
+        while (self.pending or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
+            self._admit()
+            self.step()
+            ticks += 1
+        return ticks

@@ -1,0 +1,6 @@
+from repro.sharding.partitioning import (
+    count_bytes,
+    shardings_from_axes,
+    specs_from_axes,
+    with_shardings,
+)

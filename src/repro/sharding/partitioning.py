@@ -1,0 +1,55 @@
+"""Partitioning: logical axes -> NamedSharding trees for params, optimizer
+state, caches and batches, with divisibility fallbacks (common.resolve_spec).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import DEFAULT_RULES, ShardCtx, resolve_spec
+
+
+def specs_from_axes(sds_tree, axes_tree, mesh: Mesh, rules: dict | None = None):
+    """(ShapeDtypeStruct tree, logical-axes tree) -> PartitionSpec tree."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    ctx = ShardCtx(mesh, merged)
+
+    def one(sds, axes):
+        if axes is None:
+            return P()
+        axes = tuple(axes)
+        nd = len(sds.shape)
+        if len(axes) < nd:
+            axes = (None,) * (nd - len(axes)) + axes
+        return resolve_spec(sds.shape, axes, ctx)
+
+    return jax.tree_util.tree_map(
+        one, sds_tree, axes_tree,
+        is_leaf=lambda x: x is None or (isinstance(x, tuple)
+                                        and all(isinstance(a, (str, type(None))) for a in x)))
+
+
+def shardings_from_axes(sds_tree, axes_tree, mesh: Mesh, rules=None):
+    specs = specs_from_axes(sds_tree, axes_tree, mesh, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_shardings(sds_tree, axes_tree, mesh: Mesh, rules=None):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (for jit.lower)."""
+    sh = shardings_from_axes(sds_tree, axes_tree, mesh, rules)
+    return jax.tree_util.tree_map(
+        lambda sds, s: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=s),
+        sds_tree, sh)
+
+
+def count_bytes(sds_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(sds_tree)
+    return sum(int(jnp.prod(jnp.array(l.shape))) * jnp.dtype(l.dtype).itemsize
+               for l in leaves)

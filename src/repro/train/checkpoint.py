@@ -1,0 +1,187 @@
+"""Fault-tolerant checkpointing.
+
+Design (multi-thousand-node requirements from the brief):
+  * atomic step directories: write to ``step_N.tmp`` then rename; a LATEST
+    marker is updated only after the rename, so a crash mid-save can never
+    corrupt the restore point;
+  * async saves: a writer thread takes a host-local snapshot
+    (device_get) and persists it off the critical path; ``wait()`` joins
+    before the next save or at exit;
+  * elastic restore: arrays are stored with their *global* shape and
+    loaded with ``jax.device_put`` against the *target* sharding — a
+    checkpoint taken on one mesh restores onto any other mesh shape
+    (tested in tests/test_train.py::test_elastic_restore);
+  * data-iterator state and step metadata ride along as JSON;
+  * bounded retention (keep_checkpoints) with oldest-first GC;
+  * SIGTERM/preemption hook: ``install_preemption_hook`` saves a final
+    checkpoint before exit (cluster maintenance events).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import signal
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: "queue.Queue[tuple]" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state, extra: dict | None = None):
+        """Snapshot to host memory, then persist (async if configured)."""
+        host_state = jax.tree_util.tree_map(lambda x: np.asarray(x), state)
+        if self.async_save:
+            self.wait()
+            self._worker = threading.Thread(
+                target=self._persist, args=(step, host_state, extra or {}),
+                daemon=True)
+            self._worker.start()
+        else:
+            self._persist(step, host_state, extra or {})
+
+    def _persist(self, step: int, host_state, extra: dict):
+        try:
+            tmp = self.dir / f"step_{step:08d}.tmp"
+            final = self.dir / f"step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            flat, _ = _flatten(host_state)
+            # npz can't serialize ml_dtypes (bf16/fp8); store a bit-view and
+            # record the true dtype for restore
+            dtypes = {}
+            store = {}
+            for k, v in flat.items():
+                v = np.asarray(v)
+                dtypes[k] = str(v.dtype)
+                if v.dtype.kind not in "fiub" or str(v.dtype) not in (
+                        "float64", "float32", "float16", "int64", "int32",
+                        "int16", "int8", "uint64", "uint32", "uint16",
+                        "uint8", "bool"):
+                    v = v.view(np.uint8).reshape(v.shape + (v.dtype.itemsize,))
+                store[k] = v
+            np.savez(tmp / "arrays.npz", **store)
+            meta = {"step": step, "time": time.time(),
+                    "keys": sorted(flat.keys()), "dtypes": dtypes, **extra}
+            (tmp / "meta.json").write_text(json.dumps(meta))
+            if final.exists():                           # re-save of a step
+                shutil.rmtree(final)
+            os.replace(tmp, final)                       # atomic publish
+            (self.dir / "LATEST.tmp").write_text(str(step))
+            os.replace(self.dir / "LATEST.tmp", self.dir / "LATEST")
+            self._gc()
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        marker = self.dir / "LATEST"
+        if marker.exists():
+            try:
+                step = int(marker.read_text().strip())
+                if (self.dir / f"step_{step:08d}" / "meta.json").exists():
+                    return step
+            except ValueError:
+                pass
+        steps = [s for s in self.all_steps()
+                 if (self.dir / f"step_{s:08d}" / "meta.json").exists()]
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target):
+        """Load ``step`` resharded onto the shardings/dtypes of ``target``
+        (a tree of ShapeDtypeStructs-with-sharding or concrete arrays).
+        Elastic: the stored global arrays are placed per the target specs.
+        """
+        path = self.dir / f"step_{step:08d}"
+        data = np.load(path / "arrays.npz")
+        meta = json.loads((path / "meta.json").read_text())
+        dtypes = meta.get("dtypes", {})
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(target)
+        leaves = []
+        for p, t in flat_t:
+            key = _path_key(p)
+            if key not in data:
+                raise KeyError(f"checkpoint {step} missing {key}")
+            arr = data[key]
+            stored_dtype = dtypes.get(key, str(arr.dtype))
+            if arr.dtype == np.uint8 and stored_dtype != "uint8":
+                # bit-view restore of ml_dtypes (bf16/fp8)
+                import ml_dtypes
+                true_dt = np.dtype(getattr(ml_dtypes, stored_dtype, None)
+                                   or stored_dtype)
+                arr = arr.reshape(-1).view(true_dt).reshape(arr.shape[:-1])
+            if tuple(arr.shape) != tuple(t.shape):
+                raise ValueError(
+                    f"{key}: stored {arr.shape} != target {t.shape}")
+            arr = arr.astype(t.dtype)
+            sharding = getattr(t, "sharding", None)
+            leaves.append(jax.device_put(arr, sharding)
+                          if sharding is not None else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_meta(self, step: int) -> dict:
+        return json.loads(
+            (self.dir / f"step_{step:08d}" / "meta.json").read_text())
+
+
+def install_preemption_hook(save_fn: Callable[[], None]):
+    """SIGTERM -> checkpoint-and-exit (cloud preemption / maintenance)."""
+    def handler(signum, frame):
+        save_fn()
+        raise SystemExit(143)
+
+    signal.signal(signal.SIGTERM, handler)

@@ -1,0 +1,144 @@
+"""Optimizer substrate, from scratch: AdamW with decoupled weight decay,
+global-norm clipping, warmup+cosine/linear schedules, optional fp32 master
+weights over low-precision params, and gradient compression hooks.
+
+The optimizer state mirrors the parameter tree, so the partitioner reuses
+the parameter logical axes for m/v/master (ZeRO-style: state is sharded
+exactly as the weights are, over both 'data' and 'model').
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def learning_rate(tcfg: TrainConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    if tcfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((step - tcfg.warmup_steps)
+                        / max(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+        if tcfg.schedule == "cosine":
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif tcfg.schedule == "linear":
+            decay = 1.0 - frac
+        else:
+            raise ValueError(tcfg.schedule)
+    return tcfg.learning_rate * warm * decay
+
+
+# ---------------------------------------------------------------------------
+# Gradient utilities
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return tree_map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def compress_gradients(grads, method: str):
+    """Gradient compression for the cross-pod all-reduce.
+
+    bf16    — cast to bf16 before the reduction (2x wire traffic saving).
+    fp8sim  — simulate fp8-e4m3 quantization (value-faithful emulation:
+              scale to e4m3 dynamic range, round via float8 cast).
+    Error feedback is applied by the accumulation loop in step.py.
+    """
+    if method == "none":
+        return grads
+    if method == "bf16":
+        return tree_map(lambda g: g.astype(jnp.bfloat16), grads)
+    if method == "fp8sim":
+        def q(g):
+            g32 = g.astype(jnp.float32)
+            amax = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12)
+            scale = 448.0 / amax          # e4m3 max normal
+            return (g32 * scale).astype(jnp.float8_e4m3fn), scale
+
+        def qd(g):
+            v, s = q(g)
+            return v.astype(jnp.float32) / s
+        return tree_map(qd, grads)
+    raise ValueError(method)
+
+
+def decompress_gradients(grads):
+    return tree_map(lambda g: g.astype(jnp.float32), grads)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(params, tcfg: TrainConfig):
+    state: dict[str, Any] = {
+        "m": tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if tcfg.use_master_weights:
+        state["master"] = tree_map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def opt_state_axes(param_axes, tcfg: TrainConfig):
+    """Optimizer-state logical axes mirror the parameter axes."""
+    axes: dict[str, Any] = {"m": param_axes, "v": param_axes, "step": ()}
+    if tcfg.use_master_weights:
+        axes["master"] = param_axes
+    return axes
+
+
+def adamw_update(grads, opt_state, params, tcfg: TrainConfig):
+    """One AdamW step. grads fp32 (post-clip). Returns (params, opt_state, lr)."""
+    step = opt_state["step"] + 1
+    lr = learning_rate(tcfg, step)
+    b1, b2 = tcfg.beta1, tcfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = tree_map(lambda m, g: b1 * m + (1 - b1) * g, opt_state["m"], grads)
+    new_v = tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                     opt_state["v"], grads)
+
+    base = opt_state.get("master", params)
+
+    def upd(p, m, v):
+        p32 = p.astype(jnp.float32)
+        update = (m / c1) / (jnp.sqrt(v / c2) + tcfg.eps)
+        return p32 - lr * (update + tcfg.weight_decay * p32)
+
+    new_base = tree_map(upd, base, new_m, new_v)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if tcfg.use_master_weights:
+        new_state["master"] = new_base
+        new_params = tree_map(lambda b, p: b.astype(p.dtype), new_base, params)
+    else:
+        new_params = tree_map(lambda b, p: b.astype(p.dtype), new_base, params)
+    return new_params, new_state, lr

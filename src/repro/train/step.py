@@ -1,0 +1,167 @@
+"""Train/serve step builders: the jit-able functions the launcher lowers.
+
+``make_train_step`` produces (train_step, state_sds, batch_sds) where the
+ShapeDtypeStructs carry NamedShardings — exactly what the multi-pod dry-run
+lowers with, and what the real training loop feeds with device arrays.
+
+Distributed-optimization features, all config-driven:
+  * microbatch gradient accumulation (scan over grad chunks),
+  * gradient compression (bf16 / fp8-sim) with error feedback,
+  * global-norm clipping, AdamW with sharded (ZeRO-style) state,
+  * activation remat via cfg.remat (applied inside the model blocks),
+  * the paper's systolic ring matmuls via cfg.systolic_mode.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import build_model, input_specs, split_tree, use_sharding
+from repro.models.common import rules_for
+from repro.models.model import input_specs as model_input_specs
+from repro.sharding.partitioning import with_shardings
+from repro.train import optimizer as opt
+
+
+# ---------------------------------------------------------------------------
+# State construction
+# ---------------------------------------------------------------------------
+
+
+def state_shapes(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
+    """eval_shape the full train state; returns (sds_with_shardings, axes)."""
+    model = build_model(cfg)
+
+    def init_all(key):
+        params_tree = model.init(key)
+        params, _ = split_tree(params_tree)
+        return {"params": params, "opt": opt.init_opt_state(params, tcfg)}
+
+    # axes need a real (non-abstract) pass through init for the aux data:
+    # eval_shape preserves Param aux, so run it abstractly and split after.
+    params_tree_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sds, param_axes = split_tree(params_tree_sds)
+    state_sds = jax.eval_shape(init_all, jax.random.PRNGKey(0))
+    state_axes = {"params": param_axes,
+                  "opt": opt.opt_state_axes(param_axes, tcfg)}
+    state_sds = with_shardings(state_sds, state_axes, mesh,
+                               rules=rules_for(cfg))
+    return state_sds, state_axes
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    model = build_model(cfg)
+    params, _ = split_tree(model.init(key))
+    return {"params": params, "opt": opt.init_opt_state(params, tcfg)}
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    specs, axes = model_input_specs(cfg, shape)
+    return with_shardings(specs, axes, mesh, rules=rules_for(cfg)), axes
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh) -> Callable:
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state, batch):
+        with use_sharding(mesh, rules=rules_for(cfg)):
+            params = state["params"]
+            if tcfg.microbatches > 1:
+                grads, (loss, metrics) = _accumulated_grads(
+                    loss_fn, params, batch, tcfg)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            grads = opt.compress_gradients(grads, tcfg.grad_compression)
+            grads = opt.decompress_gradients(grads)
+            grads, gnorm = opt.clip_by_global_norm(grads, tcfg.grad_clip)
+            new_params, new_opt, lr = opt.adamw_update(
+                grads, state["opt"], params, tcfg)
+            out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                           **{k: v for k, v in metrics.items()}}
+            return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def _accumulated_grads(loss_fn, params, batch, tcfg: TrainConfig):
+    """Microbatched gradient accumulation with fp32 accumulators."""
+    k = tcfg.microbatches
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        return x.reshape((k, b // k) + x.shape[1:])
+
+    micro = jax.tree_util.tree_map(reshape, batch)
+    zero_grads = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree_util.tree_map(
+            lambda a, gi: a + gi.astype(jnp.float32) / k, acc, g)
+        return (acc, loss_acc + loss / k), metrics
+
+    (grads, loss), metrics = jax.lax.scan(body, (zero_grads, jnp.zeros(())), micro)
+    metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+    return grads, (loss, metrics)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh) -> Callable:
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        with use_sharding(mesh, rules=rules_for(cfg)):
+            return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh) -> Callable:
+    """One decode token against a seq_len-sized cache (the decode_* cells)."""
+    model = build_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        with use_sharding(mesh, rules=rules_for(cfg)):
+            logits, new_cache = model.decode_step(params, cache, tokens)
+            return logits, new_cache
+
+    return serve_step
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    model = build_model(cfg)
+    cache_sds = jax.eval_shape(
+        partial(model.init_cache, shape.global_batch, shape.seq_len))
+    cache_axes = model.cache_axes()
+    return with_shardings(cache_sds, cache_axes, mesh,
+                          rules=rules_for(cfg)), cache_axes
+
+
+def params_shapes(cfg: ModelConfig, mesh: Mesh):
+    model = build_model(cfg)
+    params_tree_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sds, param_axes = split_tree(params_tree_sds)
+    return with_shardings(params_sds, param_axes, mesh,
+                          rules=rules_for(cfg)), param_axes

@@ -1,0 +1,152 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.systolic_matmul.ops import systolic_matmul
+from repro.kernels.systolic_matmul.ref import matmul_ref
+from repro.kernels.conv2d.ops import conv2d
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.fft.ops import fft256
+from repro.kernels.fft.ref import fft_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_sequential_ref
+from repro.models.ssm import ssd_chunked
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# ---------------------------------------------------------------- matmul
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (128, 512, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_systolic_matmul(m, k, n, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
+    y = systolic_matmul(a, b)
+    r = matmul_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32),
+                               rtol=tol, atol=tol * k)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (64, 128, 256)])
+def test_systolic_matmul_blocks(bm, bn, bk):
+    ka, kb = jax.random.split(jax.random.PRNGKey(1))
+    a = jax.random.normal(ka, (256, 512), jnp.float32)
+    b = jax.random.normal(kb, (512, 256), jnp.float32)
+    y = systolic_matmul(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(matmul_ref(a, b)),
+                               rtol=1e-4, atol=1e-2)
+
+
+# ---------------------------------------------------------------- conv2d
+@pytest.mark.parametrize("h,w,bm", [(256, 256, 128), (128, 64, 32),
+                                    (64, 256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv2d(h, w, bm, dtype):
+    kx, kk = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(kx, (h, w), jnp.float32).astype(dtype)
+    kern = jax.random.normal(kk, (3, 3), jnp.float32).astype(dtype)
+    y = conv2d(x, kern, bm=bm)
+    r = conv2d_ref(x.astype(jnp.float32), kern.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(r),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------- fft
+@pytest.mark.parametrize("batch", [16, 64])
+def test_fft256(batch):
+    key = jax.random.PRNGKey(3)
+    kr, ki = jax.random.split(key)
+    x = (jax.random.normal(kr, (batch, 256))
+         + 1j * jax.random.normal(ki, (batch, 256))).astype(jnp.complex64)
+    y = fft256(x)
+    r = fft_ref(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_fft256_impulse():
+    x = jnp.zeros((4, 256), jnp.complex64).at[:, 1].set(1.0)
+    y = fft256(x)
+    r = fft_ref(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), atol=1e-4)
+
+
+# ---------------------------------------------------------------- ssd
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32)])
+@pytest.mark.parametrize("g", [1, 2])
+def test_ssd_kernel_vs_sequential(s, chunk, g):
+    b, h, p, n = 2, 4, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, g, n), jnp.float32) * 0.3
+    cc = jax.random.normal(ks[4], (b, s, g, n), jnp.float32) * 0.3
+    d = jnp.ones((h,), jnp.float32)
+    y = ssd(x, dt, a, bb, cc, d, chunk=chunk)
+    r = ssd_sequential_ref(x, dt, a, bb, cc, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_ssd_kernel_vs_model_chunked():
+    """Kernel twin == the model-layer SSD implementation."""
+    from repro.configs.base import ModelConfig
+    b, s, h, p, n, g = 2, 64, 4, 8, 16, 1
+    cfg = ModelConfig(ssm_chunk=16)
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, g, n), jnp.float32) * 0.3
+    cc = jax.random.normal(ks[4], (b, s, g, n), jnp.float32) * 0.3
+    d = jnp.ones((h,), jnp.float32)
+    y_kernel = ssd(x, dt, a, bb, cc, d, chunk=16)
+    y_model = ssd_chunked(x, dt, a, bb, cc, d, cfg)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- flash attention
+@pytest.mark.parametrize("s,bq,bkv", [(256, 128, 128), (256, 64, 128),
+                                      (512, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(s, bq, bkv, dtype):
+    b, h, d = 2, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32).astype(dtype)
+    y = flash_attention(q, k, v, bq=bq, bkv=bkv)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    r = attention_ref(qf, kf, vf).reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_gqa():
+    b, s, h, kvh, d = 2, 256, 8, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kvh, d), jnp.float32)
+    y = flash_attention(q, k, v)
+    ke = jnp.repeat(k, h // kvh, axis=2)
+    ve = jnp.repeat(v, h // kvh, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = ke.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = ve.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    r = attention_ref(qf, kf, vf).reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,74 @@
+"""Prefill <-> decode parity: running the full forward over a prompt must
+produce the same next-token logits as feeding the prompt token-by-token
+through the decode path. Exercises, end to end: chunked SSD vs sequential
+recurrence (mamba/zamba), absorbed-MLA decode vs expanded MLA prefill
+(deepseek), GQA caches + RoPE positions, SWA ring buffers (mixtral), and
+MoE routing consistency between the two paths."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model, split_tree
+
+ARCHS = ["qwen3-0.6b", "olmo-1b", "mixtral-8x22b", "deepseek-v2-lite-16b",
+         "mamba2-1.3b", "zamba2-1.2b", "internvl2-1b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_parity(arch):
+    cfg = get_smoke_config(arch)
+    # fp32 end-to-end so the comparison isn't dominated by bf16 rounding
+    from dataclasses import replace
+    cfg = replace(cfg, dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
+    T = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, T), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.num_patches, cfg.vit_dim),
+            jnp.float32)
+    prefill_logits = jax.jit(model.prefill)(params, batch)
+
+    cache = model.init_cache(2, 32)
+    step = jax.jit(model.decode_step)
+    logits = None
+    for t in range(T):
+        logits, cache = step(params, cache, tokens[:, t:t + 1])
+    if cfg.family == "vlm":
+        # decode path has no patch embeds; prefill overwrote the prefix —
+        # parity only holds without image fusion, so re-run prefill plain
+        prefill_logits = jax.jit(model.prefill)(params, {"tokens": tokens})
+
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(prefill_logits), rtol=2e-3, atol=2e-3)
+
+
+def test_whisper_prefill_decode_parity():
+    from dataclasses import replace
+    cfg = replace(get_smoke_config("whisper-tiny"), dtype="float32",
+                  param_dtype="float32")
+    model = build_model(cfg)
+    params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
+    T = 6
+    frames = jax.random.normal(jax.random.PRNGKey(1),
+                               (2, cfg.enc_frames, cfg.d_model), jnp.float32)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, T), 0,
+                                cfg.vocab_size)
+    prefill_logits = jax.jit(model.prefill)(
+        params, {"frames": frames, "tokens": tokens})
+
+    memory = jax.jit(model.encode)(params, frames)
+    cache = model.init_cache(2, 32)
+    cache = model.fill_cross_cache(params, cache, memory)
+    step = jax.jit(model.decode_step)
+    logits = None
+    for t in range(T):
+        logits, cache = step(params, cache, tokens[:, t:t + 1])
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(prefill_logits), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,248 @@
+"""Training substrate tests: optimizer math, accumulation equivalence,
+compression, checkpoint atomicity/roundtrip, elastic restore, data pipeline
+determinism and resume."""
+import os
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_smoke_config
+from repro.data.pipeline import DataLoader, SyntheticLM
+from repro.models import build_model, split_tree
+from repro.train import optimizer as opt
+from repro.train import step as step_lib
+from repro.train.checkpoint import CheckpointManager
+from repro.launch.mesh import make_mesh
+
+
+def small_params():
+    return {"a": jnp.ones((4, 3)) * 0.5, "b": {"c": jnp.arange(5, dtype=jnp.float32)}}
+
+
+def test_adamw_matches_reference():
+    """One AdamW step vs a literal numpy transcription of the update rule."""
+    tcfg = TrainConfig(learning_rate=1e-2, weight_decay=0.1, warmup_steps=0,
+                       total_steps=100, schedule="constant",
+                       use_master_weights=False)
+    params = small_params()
+    grads = jax.tree_util.tree_map(lambda p: jnp.full_like(p, 0.3), params)
+    state = opt.init_opt_state(params, tcfg)
+    new_params, new_state, lr = opt.adamw_update(grads, state, params, tcfg)
+
+    # reference
+    g = 0.3
+    m = (1 - tcfg.beta1) * g
+    v = (1 - tcfg.beta2) * g * g
+    mhat = m / (1 - tcfg.beta1)
+    vhat = v / (1 - tcfg.beta2)
+    for p_old, p_new in zip(jax.tree_util.tree_leaves(params),
+                            jax.tree_util.tree_leaves(new_params)):
+        expect = np.asarray(p_old) - 1e-2 * (
+            mhat / (np.sqrt(vhat) + tcfg.eps) + 0.1 * np.asarray(p_old))
+        np.testing.assert_allclose(np.asarray(p_new), expect, rtol=1e-5)
+    assert int(new_state["step"]) == 1
+    assert float(lr) == pytest.approx(1e-2)
+
+
+def test_lr_schedule():
+    tcfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=110,
+                       schedule="cosine")
+    assert float(opt.learning_rate(tcfg, jnp.asarray(0))) == 0.0
+    assert float(opt.learning_rate(tcfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(opt.learning_rate(tcfg, jnp.asarray(110))) == pytest.approx(0.0, abs=1e-6)
+    mid = float(opt.learning_rate(tcfg, jnp.asarray(60)))
+    assert 0.4 < mid < 0.6
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.ones((10,)) * 3.0}
+    clipped, norm = opt.clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(3.0 * np.sqrt(10), rel=1e-5)
+    got = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert got == pytest.approx(1.0, rel=1e-5)
+
+
+@pytest.mark.parametrize("method", ["bf16", "fp8sim"])
+def test_grad_compression_bounded_error(method):
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 0.01}
+    cg = opt.decompress_gradients(opt.compress_gradients(g, method))
+    rel = float(jnp.linalg.norm(cg["w"] - g["w"]) / jnp.linalg.norm(g["w"]))
+    assert rel < (0.01 if method == "bf16" else 0.1), rel
+
+
+def test_grad_accumulation_equivalence():
+    """microbatches=4 gradients == full-batch gradients (linear loss avg)."""
+    cfg = get_smoke_config("olmo-1b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    model = build_model(cfg)
+    params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                     cfg.vocab_size),
+        "targets": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0,
+                                      cfg.vocab_size),
+    }
+
+    def loss_fn(p, b):
+        return model.loss(p, b)
+
+    g_full = jax.grad(lambda p: loss_fn(p, batch)[0])(params)
+    g_acc, (loss, _) = step_lib._accumulated_grads(
+        loss_fn, params, batch, TrainConfig(microbatches=4))
+    for a, b in zip(jax.tree_util.tree_leaves(g_full),
+                    jax.tree_util.tree_leaves(g_acc)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-4)
+
+
+def test_train_step_reduces_loss():
+    cfg = get_smoke_config("qwen3-0.6b")
+    tcfg = TrainConfig(learning_rate=5e-3, warmup_steps=0, total_steps=100,
+                       schedule="constant", microbatches=1)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    step = jax.jit(step_lib.make_train_step(cfg, tcfg, mesh))
+    state = step_lib.init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                     cfg.vocab_size),
+        "targets": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0,
+                                      cfg.vocab_size),
+    }
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    state = {"params": small_params(), "step": jnp.asarray(7)}
+    mgr.save(7, state)
+    assert mgr.latest_step() == 7
+    target = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = mgr.restore(7, target)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    state = {"x": jnp.ones((8,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A half-written tmp dir must never be picked up as a restore point."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(5, {"x": jnp.ones((4,))})
+    # simulate a crashed save
+    crash = tmp_path / "step_00000009.tmp"
+    crash.mkdir()
+    (crash / "arrays.npz").write_bytes(b"garbage")
+    assert mgr.latest_step() == 5
+
+
+def test_elastic_restore(tmp_path):
+    """Checkpoint saved under one mesh restores onto a different mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mesh_a = make_mesh((1, 1), ("data", "model"))
+    w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    state = {"w": jax.device_put(w, NamedSharding(mesh_a, P("data", None)))}
+    mgr.save(3, state)
+    # "new cluster": different mesh + different partitioning
+    mesh_b = make_mesh((1, 1), ("x", "y"))
+    target = {"w": jax.ShapeDtypeStruct(
+        (8, 8), jnp.float32, sharding=NamedSharding(mesh_b, P(None, "y")))}
+    restored = mgr.restore(3, target)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(w))
+    assert restored["w"].sharding.spec == P(None, "y")
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_determinism_and_resume():
+    src = SyntheticLM(vocab_size=1000, seed=3)
+    a = DataLoader(src, global_batch=4, seq_len=16)
+    first = [next(a) for _ in range(5)]
+    a.close()
+    # resume from step 3 reproduces batches 3,4
+    b = DataLoader(src, global_batch=4, seq_len=16, start_step=3)
+    b.load_state_dict({"step": 3})
+    resumed = [next(b) for _ in range(2)]
+    b.close()
+    np.testing.assert_array_equal(first[3]["tokens"], resumed[0]["tokens"])
+    np.testing.assert_array_equal(first[4]["targets"], resumed[1]["targets"])
+
+
+def test_data_host_sharding_disjoint():
+    src = SyntheticLM(vocab_size=1000, seed=3)
+    h0 = DataLoader(src, global_batch=8, seq_len=8, host_id=0, host_count=2)
+    h1 = DataLoader(src, global_batch=8, seq_len=8, host_id=1, host_count=2)
+    b0, b1 = next(h0), next(h1)
+    h0.close(), h1.close()
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_targets_are_shifted_tokens():
+    src = SyntheticLM(vocab_size=50, seed=1)
+    dl = DataLoader(src, global_batch=2, seq_len=12)
+    b = next(dl)
+    dl.close()
+    raw = src.batch(0, 2, 12)
+    np.testing.assert_array_equal(b["tokens"], raw[:, :-1])
+    np.testing.assert_array_equal(b["targets"], raw[:, 1:])
+
+
+def test_moe_subexpert_equivalence():
+    """moe_subexperts=k is mathematically identical to the plain MoE
+    (SwiGLU is elementwise in f; down-proj partials sum in the combine)."""
+    from dataclasses import replace
+    from repro.configs.base import ModelConfig
+    from repro.models import moe as moe_lib
+    from repro.models.common import split_tree
+
+    cfg1 = ModelConfig(family="moe", d_model=64, d_ff=128, d_ff_expert=128,
+                       num_experts=4, experts_per_token=2,
+                       capacity_factor=8.0, dtype="float32",
+                       param_dtype="float32")
+    cfg2 = replace(cfg1, moe_subexperts=2)
+    p1, _ = split_tree(moe_lib.init_moe(jax.random.PRNGKey(0), cfg1))
+
+    def split_gate(w):
+        e, d, f = w.shape
+        return w.reshape(e, d, 2, f // 2).transpose(0, 2, 1, 3) \
+            .reshape(2 * e, d, f // 2)
+
+    def split_down(w):
+        e, f, d = w.shape
+        return w.reshape(e, 2, f // 2, d).reshape(2 * e, f // 2, d)
+
+    p2 = dict(p1)
+    p2["w_gate"] = split_gate(p1["w_gate"])
+    p2["w_up"] = split_gate(p1["w_up"])
+    p2["w_down"] = split_down(p1["w_down"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    y1, _ = moe_lib.apply_moe(p1, x, cfg1)
+    y2, _ = moe_lib.apply_moe(p2, x, cfg2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-3)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from benchmarks.common import emit, hlo_counts, time_fn
+from repro.compat import shard_map
 from repro.core import energy
 from repro.core.collective_matmul import cannon_matmul, ring_ag_matmul
 from repro.core.topology import Topology, ring, snake_ring, torus_shift
@@ -53,7 +54,7 @@ def _cannon(mesh, rows, cols, m, n, k, mode="qlr"):
     def body(al, bl):
         return cannon_matmul(al[0], bl[0], left, up, rows, cols, mode)[None]
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(P("pe"), P("pe")),
+    fn = shard_map(body, mesh=mesh, in_specs=(P("pe"), P("pe")),
                        out_specs=P("pe"), check_vma=False)
 
     def layout(a, b):
@@ -120,7 +121,7 @@ def run(n_dev: int = 16, base: int = 128):
             (out,) = ring_ag_matmul(al, [bl], topo, mode)
             return out
 
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(shard_map(
             body, mesh=mesh, in_specs=(P("pe", None), P(None, None)),
             out_specs=P(None, None), check_vma=False))
         # stream A's row blocks around the ring (the paper: A rows pushed

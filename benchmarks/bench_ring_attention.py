@@ -1,0 +1,75 @@
+"""Ring attention link-mode sweep — the hybrid execution model on the
+attention core.
+
+Sweeps the four link modes over sequence lengths on 8 fake devices
+(sequence-parallel over a 'model' ring). Reported per (mode, S): wall
+time, static HLO op count (sw inflates with the software-FIFO bookkeeping
+exactly like the paper's Fig. 3), collective count, and MEMPOOL-modeled
+energy from the attention FLOPs and the per-class traffic split:
+
+  ring modes — K/V bytes ride the systolic links ((n-1)/n of the K/V
+               volume, n hops), q/out stay local;
+  baseline   — the same K/V bytes move as shared-memory multicast
+               (all-gather) traffic instead.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.bench_ring_attention
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks.common import emit, hlo_counts, time_fn
+from repro.core import energy
+from repro.core.ring_attention import MODES, systolic_ring_attention
+from repro.launch.mesh import make_mesh
+
+
+def run(n_dev: int = 8, seq_lens=(512, 1024, 2048), b: int = 1,
+        h: int = 8, hd: int = 64):
+    mesh = make_mesh((n_dev,), ("model",))
+    key = jax.random.PRNGKey(0)
+    spec = NamedSharding(mesh, P(None, "model", None, None))
+
+    for s in seq_lens:
+        ks = jax.random.split(key, 3)
+        q = jax.device_put(
+            jax.random.normal(ks[0], (b, s, h, hd), jnp.float32), spec)
+        k = jax.device_put(
+            jax.random.normal(ks[1], (b, s, h, hd), jnp.float32), spec)
+        v = jax.device_put(
+            jax.random.normal(ks[2], (b, s, h, hd), jnp.float32), spec)
+
+        # causal attention FLOPs: 2 matmuls over ~s^2/2 score entries
+        flops = 2 * 2 * b * h * (s * s / 2) * hd
+        kv_bytes = 2 * b * s * h * hd * 4
+        ref = None
+        for mode in MODES:
+            fn = jax.jit(lambda q, k, v, m=mode: systolic_ring_attention(
+                q, k, v, mesh, m, causal=True))
+            y = fn(q, k, v)
+            if ref is None:
+                ref = y
+            err = float(jnp.abs(y - ref).max())
+            assert err < 1e-4, (mode, s, err)
+            us = time_fn(fn, q, k, v)
+            counts = hlo_counts(fn, q, k, v)
+            # traffic classes: streamed K/V on links vs multicast fetch
+            link_bytes = 0 if mode == "baseline" else \
+                kv_bytes * (n_dev - 1) // n_dev
+            shared = kv_bytes if mode == "baseline" else kv_bytes // n_dev
+            acct = energy.account(
+                energy.MEMPOOL, flops=flops, local_bytes=shared,
+                remote_bytes=link_bytes)
+            emit(f"ring_attn_{mode}_s{s}", us,
+                 f"ops={counts['total_ops']};"
+                 f"colls={counts['n_collectives']};"
+                 f"gopsw={acct.gops_per_w:.0f};pe={acct.pe_fraction:.2f}")
+
+
+if __name__ == "__main__":
+    run()

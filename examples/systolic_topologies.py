@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.collective_matmul import ring_ag_matmul
 from repro.core.fft import pipelined_fft
 from repro.core.halo import conv2d_ref, conv2d_systolic
@@ -51,11 +52,36 @@ def main():
         def body(xl, wl, mode=mode):
             (out,) = ring_ag_matmul(xl, [wl], topo, mode)
             return out
-        fn = jax.shard_map(body, mesh=mesh, in_specs=(P("pe", None), P(None, None)),
+        fn = shard_map(body, mesh=mesh, in_specs=(P("pe", None), P(None, None)),
                            out_specs=P(None, None), check_vma=False)
         y = jax.jit(fn)(jax.device_put(x, NamedSharding(mesh, P("pe", None))), w)
         err = float(jnp.abs(y - ref).max())
         ops = op_count(fn, jax.device_put(x, NamedSharding(mesh, P("pe", None))), w)
+        print(f"  {mode:9s} err={err:.1e} hlo_ops={ops:4d}"
+              f"{'  <- software-queue bookkeeping overhead' if mode == 'sw' else ''}")
+
+    # ring attention: q shards resident, K/V blocks stream the ring
+    print("\nring attention (q resident / K/V streamed, online softmax):")
+    from repro.core.ring_attention import systolic_ring_attention
+    B, S, H, HD = 1, 32, 2, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, HD), jnp.float32)
+    kk = jax.random.normal(ks[1], (B, S, H, HD), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, HD), jnp.float32)
+    # the wrapper rings over a 'model' axis, so demo it on its own mesh
+    mesh_m = make_mesh((8,), ("model",))
+    args = [jax.device_put(a, NamedSharding(mesh_m, P(None, "model", None,
+                                                      None)))
+            for a in (q, kk, v)]
+    ref = None
+    for mode in ("baseline", "sw", "xqueue", "qlr"):
+        fn = jax.jit(lambda q, k, v, m=mode: systolic_ring_attention(
+            q, k, v, mesh_m, m, causal=True))
+        y = fn(*args)
+        if ref is None:
+            ref = y
+        err = float(jnp.abs(y - ref).max())
+        ops = op_count(fn, *args)
         print(f"  {mode:9s} err={err:.1e} hlo_ops={ops:4d}"
               f"{'  <- software-queue bookkeeping overhead' if mode == 'sw' else ''}")
 

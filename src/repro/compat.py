@@ -1,0 +1,102 @@
+"""Single source of truth for version-sensitive JAX imports.
+
+The systolic stack leans on two APIs whose spelling moved across JAX
+releases:
+
+  * ``shard_map`` — lived in ``jax.experimental.shard_map`` (with a
+    ``check_rep`` flag) through the 0.4.x line, then graduated to
+    ``jax.shard_map`` with the flag renamed to ``check_vma``.
+  * Pallas TPU compiler params — ``pltpu.TPUCompilerParams`` on 0.4.x,
+    renamed to ``pltpu.CompilerParams`` later.
+
+Every ``shard_map``/Pallas call site in ``core/``, ``kernels/``,
+``models/``, ``benchmarks/`` and ``examples/`` resolves through this
+module so a JAX upgrade (or downgrade) is a one-file change.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Optional
+
+import jax
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6-style API
+    _shard_map_impl = jax.shard_map
+else:                                              # 0.4.x experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+# Replication/varying-manual-axes checking flag, as spelled by this jax.
+_CHECK_FLAG = "check_vma" if "check_vma" in _SHARD_MAP_PARAMS else "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None,
+              **kwargs):
+    """``jax.shard_map`` with the modern keyword surface on any jax.
+
+    ``check_vma`` (new name) is translated to ``check_rep`` on releases
+    that predate the rename; ``None`` leaves the jax default in place.
+    """
+    if check_vma is not None:
+        kwargs[_CHECK_FLAG] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# optimization_barrier
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_jvp
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` that is differentiable on every jax.
+
+    0.4.x has no AD rule for the barrier primitive, which breaks grads
+    through the sw/xqueue link schedules (they pin queue-transfer ordering
+    with barriers). The barrier only constrains *scheduling*, so its JVP is
+    the identity on tangents: the primal keeps the barrier, the tangents
+    flow through unbarriered (and transpose for reverse-mode is free since
+    the jvp is linear).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jax.lax.optimization_barrier(x), t
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU compiler params
+# ---------------------------------------------------------------------------
+
+
+def pallas_compiler_params_class():
+    """The TPU compiler-params dataclass under its installed name, or None
+    when the installed Pallas predates both spellings."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:                             # pragma: no cover
+        return None
+    return getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
+
+
+def pallas_compiler_params(**kwargs) -> Optional[Any]:
+    """Instantiate the TPU compiler params, dropping kwargs the installed
+    class doesn't know; returns None when no class (or no kwarg) resolves,
+    in which case callers skip the ``compiler_params=`` argument."""
+    cls = pallas_compiler_params_class()
+    if cls is None:
+        return None
+    accepted = frozenset(inspect.signature(cls).parameters)
+    kept = {k: v for k, v in kwargs.items() if k in accepted}
+    if not kept:
+        return None
+    return cls(**kept)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import optimization_barrier, shard_map
 from repro.core import queues
 from repro.core.topology import Topology, ring
 
@@ -131,7 +132,7 @@ def ring_matmul_rs(x, w, topo: Topology, mode: str = "qlr"):
         moved = queues.hop(topo, acc, mode)
         if mode in ("sw", "xqueue"):
             # serialize: the next partial waits for the queue transfer
-            x_tied, moved = jax.lax.optimization_barrier((x, moved))
+            x_tied, moved = optimization_barrier((x, moved))
             acc = moved + part(t, x_tied)
         else:
             acc = moved + part(t, x)  # qlr: hop overlaps the partial matmul
@@ -154,10 +155,6 @@ def cannon_matmul(a_local, b_local, row_topo: Topology, col_topo: Topology,
 
     if not preskewed:
         # initial skew: A row r shifts left r times; B col c shifts up c times
-        def skew(x, topo, times):
-            def body(i, v):
-                return queues.hop(topo, v, "qlr")
-            return jax.lax.fori_loop(0, times, body, x)
         a_local = _masked_rot(a_local, row_topo, r, n)
         b_local = _masked_rot(b_local, col_topo, c, n)
 
@@ -167,7 +164,7 @@ def cannon_matmul(a_local, b_local, row_topo: Topology, col_topo: Topology,
         acc = acc + a_local @ b_local
         if t < n - 1:
             if mode in ("sw", "xqueue"):
-                acc, a_local, b_local = jax.lax.optimization_barrier(
+                acc, a_local, b_local = optimization_barrier(
                     (acc, a_local, b_local))
             a_local = queues.hop(row_topo, a_local, mode)
             b_local = queues.hop(col_topo, b_local, mode)
@@ -247,9 +244,9 @@ def systolic_qkv(x, wq, wk, wv, mesh: Mesh, mode: str = "qlr"):
             return y2.reshape(b_, s_, w_l.shape[1], w_l.shape[2])
         return unflat(q2, wq_l), unflat(k2, wk_l), unflat(v2, wv_l)
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(x_spec, *w_specs), out_specs=out_specs,
-                       check_vma=False)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(x_spec, *w_specs), out_specs=out_specs,
+                   check_vma=False)
     return fn(x, wq, wk, wv)
 
 
@@ -276,8 +273,8 @@ def systolic_out_proj(attn_out, wo, mesh: Mesh, mode: str = "qlr"):
         w2 = wo_l.reshape(hl * hd, wo_l.shape[2])
         return ring_matmul_rs(o2, w2, topo, mode)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(x_spec, w_spec),
-                       out_specs=out_spec, check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=(x_spec, w_spec),
+                   out_specs=out_spec, check_vma=False)
     return fn(attn_out, wo)
 
 
@@ -312,7 +309,7 @@ def systolic_ffn(x, w_gate, w_up, w_down, mesh: Mesh, mode: str = "qlr"):
         h = jax.nn.silu(gate) * up                    # [B_l, S, f_local]
         return ring_matmul_rs(h, wd, topo, mode)      # [B_l, s_local, d]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, wg_spec, wg_spec, wd_spec),
         out_specs=out_spec,

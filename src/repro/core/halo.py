@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import queues
 from repro.core.topology import Topology, ring
 
@@ -61,7 +62,7 @@ def conv2d_systolic(x, kernel, mesh: Mesh, axis: str, mode: str = "qlr"):
         h = exchange_halo(x_local, axis, n, 1, mode)
         return conv2d_3x3_local(h, k_local)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh, in_specs=(P(axis, None), P(None, None)),
         out_specs=P(axis, None), check_vma=False)
     return fn(x, kernel)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import optimization_barrier, shard_map
 from repro.core.topology import chains
 
 
@@ -79,7 +80,7 @@ def pipelined(stage_fn: Callable, mesh: Mesh, axis: str,
                 jnp.logical_and(stage_idx == n_stages - 1, active),
                 outs.at[mb_c].set(y), outs)
             if mode in ("sw", "xqueue"):
-                y, outs = jax.lax.optimization_barrier((y, outs))
+                y, outs = optimization_barrier((y, outs))
             from repro.core import queues
             nxt = queues.hop(topo, y, mode)
             return (nxt, outs), None
@@ -94,7 +95,7 @@ def pipelined(stage_fn: Callable, mesh: Mesh, axis: str,
                          jnp.zeros_like(full))
         return jax.lax.psum(full, axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         run, mesh=mesh,
         in_specs=(P(), P()),
         out_specs=P(),

@@ -29,6 +29,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.compat import optimization_barrier
 from repro.core.topology import Topology
 
 MODES = ("sw", "xqueue", "qlr")
@@ -53,15 +54,15 @@ def _sw_hop(topo: Topology, x):
     full = nxt_tail == head                      # boundary check (always false here)
     buf = jax.lax.dynamic_update_index_in_dim(buf, x, tail, 0)
     tail = jnp.where(full, tail, nxt_tail)
-    buf, tail = jax.lax.optimization_barrier((buf, tail))
+    buf, tail = optimization_barrier((buf, tail))
     # the transfer itself
     moved = jax.lax.ppermute(buf, topo.axis, topo.perm)
-    moved, head = jax.lax.optimization_barrier((moved, head))
+    moved, head = optimization_barrier((moved, head))
     # pop: boundary check, read at head, bump head
     empty = head == tail
     out = jax.lax.dynamic_index_in_dim(moved, head, 0, keepdims=False)
     head = jnp.where(empty, head, jnp.mod(head + 1, depth))
-    out = jax.lax.optimization_barrier((out, head))[0]
+    out = optimization_barrier((out, head))[0]
     return out
 
 
@@ -84,7 +85,7 @@ def stream(topo: Topology, x0, n_steps: int,
             state = consume(state, buf, t)      # … compute overlaps
         else:
             state = consume(state, buf, t)
-            state, buf = jax.lax.optimization_barrier((state, buf))
+            state, buf = optimization_barrier((state, buf))
             nxt = hop(topo, buf, mode)
         return (nxt, state), None
 

@@ -1,0 +1,182 @@
+"""Sequence-parallel systolic (ring) attention — the paper's streamed-
+operand pattern applied to the attention core itself.
+
+Mapping (DESIGN.md §4): each PE keeps its **query shard resident** — the
+output-stationary operand, exactly like the C tile in ``cannon_matmul`` —
+while K/V blocks travel the ``ring("model", n)`` topology as the streamed
+operand via ``queues.stream``. The per-hop consume is one block of online-
+softmax attention: running max ``m``, denominator ``l`` and accumulator
+``acc`` are rescaled as each K/V block arrives, the same math as
+``models/attention.blocked_attention`` and the Pallas flash kernel, but
+with the block stream realized as systolic queue traffic instead of a
+local scan.
+
+Link modes (cf. core/queues.py):
+  sw      — software-queue bookkeeping around every K/V hop;
+  xqueue  — single-op hop, serialized against the block's attention math;
+  qlr     — the hop is issued before the block compute, so XLA's async
+            collective-permute overlaps the K/V transfer with the per-block
+            scores/rescale work (QLRs popping the next operand while the
+            IPU MACs);
+  baseline— all-gather K/V (the shared-memory multicast) + one dense
+            online-softmax pass: the pure shared-memory reference.
+
+This is the sequence-parallel analogue of large-scale model sharding à la
+mesh-transformer-jax: the sequence axis plays the role of the model axis,
+and attention state never leaves its owner.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import queues
+from repro.core.collective_matmul import _batch_axes, _source_table
+from repro.core.topology import Topology, ring
+
+_NEG_INF = -1e30
+
+MODES = ("baseline",) + queues.MODES
+
+
+def _expand_kv(k, num_heads: int):
+    """[B,T,Kv,hd] -> [B,T,H,hd] by repeating KV heads (GQA)."""
+    kvh = k.shape[2]
+    if kvh == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kvh, axis=2)
+
+
+def _block_update(state, q32, k_blk, v_blk, q_pos, k_pos, *, causal: bool,
+                  window: int, scale: float, num_heads: int, k_len=None,
+                  score_hint=None):
+    """One online-softmax step: fold a K/V block into (m, l, acc).
+
+    q32: [B,sq,H,hd] fp32; k_blk/v_blk: [B,t,Kv,hd]; positions are global
+    sequence indices (the mask is position-based so blocks may arrive in
+    any ring order). ``k_len`` masks padded tail positions; ``score_hint``
+    lets jit-level callers attach a sharding hint to the score block. This
+    is the single block-update both the ring schedule and the local
+    ``models/attention.blocked_attention`` oracle run.
+    """
+    m, l, acc = state
+    ke = _expand_kv(k_blk, num_heads).astype(jnp.float32)
+    ve = _expand_kv(v_blk, num_heads).astype(jnp.float32)
+    s = jnp.einsum("bshk,bthk->bhst", q32, ke) * scale    # [B,H,sq,t]
+    if score_hint is not None:
+        s = score_hint(s)
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask = jnp.logical_and(mask, k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = jnp.logical_and(mask, q_pos[:, None] - k_pos[None, :] < window)
+    if k_len is not None:
+        mask = jnp.logical_and(mask, (k_pos < k_len)[None, :])
+    s = jnp.where(mask[None, None], s, _NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum("bhst,bthk->bhsk", p, ve)
+    return m_new, l_new, acc_new
+
+
+def ring_attention(q_local, k_local, v_local, topo: Topology,
+                   mode: str = "qlr", *, causal: bool = True,
+                   window: int = 0):
+    """shard_map-local systolic attention over one ring topology.
+
+    q_local:        [B, sq_local, H, hd] — resident (output-stationary).
+    k_local/v_local: [B, s_local, Kv, hd] — this device's K/V shard, which
+                    is pushed around the ring; at hop t the buffer holds the
+                    shard of origin ``_source_table(topo)[my, t]`` and its
+                    global positions drive the causal/window mask.
+
+    Returns [B, sq_local, H, hd] fp32 — each device's attention output for
+    its own query shard (the sharded store / gather collective).
+    """
+    assert mode in MODES, mode
+    n = topo.size
+    b, sq, h, hd = q_local.shape
+    s_local = k_local.shape[1]
+    my = jax.lax.axis_index(topo.axis)
+    scale = 1.0 / math.sqrt(hd)
+    q32 = q_local.astype(jnp.float32)
+    q_pos = my * sq + jnp.arange(sq)
+
+    if mode == "baseline":
+        # shared-memory multicast: every PE reads the full K/V
+        ks = jax.lax.all_gather(k_local, topo.axis, axis=1, tiled=True)
+        vs = jax.lax.all_gather(v_local, topo.axis, axis=1, tiled=True)
+        m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, sq), jnp.float32)
+        acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+        m, l, acc = _block_update(
+            (m0, l0, acc0), q32, ks, vs, q_pos, jnp.arange(n * s_local),
+            causal=causal, window=window, scale=scale, num_heads=h)
+    else:
+        src_table = jnp.asarray(_source_table(topo))
+        kv0 = jnp.stack([k_local, v_local])  # one queue element per hop
+
+        def consume(state, kv, t):
+            src = src_table[my, t]
+            k_pos = src * s_local + jnp.arange(s_local)
+            return _block_update(state, q32, kv[0], kv[1], q_pos, k_pos,
+                                 causal=causal, window=window, scale=scale,
+                                 num_heads=h)
+
+        m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, sq), jnp.float32)
+        acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+        (m, l, acc), _ = queues.stream(topo, kv0, n, consume,
+                                       (m0, l0, acc0), mode)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # [B,H,sq,hd]
+    return out.transpose(0, 2, 1, 3)                       # [B,sq,H,hd]
+
+
+# ---------------------------------------------------------------------------
+# jit-level wrapper
+# ---------------------------------------------------------------------------
+
+
+def ring_attn_applicable(q, k, mesh: Mesh) -> bool:
+    """Shapes admit the sequence-parallel ring schedule on this mesh."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes.get("model", 0)
+    if n < 2:
+        return False
+    b, s, h, _ = q.shape
+    kvh = k.shape[2]
+    bsz = 1
+    for a in _batch_axes(mesh):
+        bsz *= sizes[a]
+    return (k.shape[1] == s and s % n == 0 and b % bsz == 0
+            and h % kvh == 0)
+
+
+def systolic_ring_attention(q, k, v, mesh: Mesh, mode: str = "qlr", *,
+                            causal: bool = True, window: int = 0):
+    """Ring attention over the 'model' axis: sequence sharded, heads whole.
+
+    q: [B,S,H,hd], k/v: [B,S,Kv,hd] (global arrays). Returns the full
+    [B,S,H,hd] fp32 attention output, sequence-sharded over 'model' (each
+    device owns its query shard's rows — the output-stationary layout).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes["model"]
+    batch = _batch_axes(mesh)
+    topo = ring("model", n)
+    spec = P(batch if batch else None, "model", None, None)
+
+    def body(q_l, k_l, v_l):
+        return ring_attention(q_l, k_l, v_l, topo, mode, causal=causal,
+                              window=window)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                   out_specs=spec, check_vma=False)
+    return fn(q, k, v)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
+
 _NEG_INF = -1e30
 
 
@@ -67,11 +69,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     scale = 1.0 / (d ** 0.5)
     body = functools.partial(_flash_kernel, scale=scale, bq=bq, bkv=bkv,
                              n_kv=skv // bkv, causal=causal)
-    try:
-        params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:
-        params = None
+    params = pallas_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
     call = pl.pallas_call(
         body,
         grid=(bh, s // bq, skv // bkv),

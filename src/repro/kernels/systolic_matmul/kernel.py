@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
+
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
@@ -51,11 +53,8 @@ def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
     out_dtype = out_dtype or a.dtype
     n_k = k // bk
     kernel = functools.partial(_matmul_kernel, n_k=n_k)
-    try:
-        params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:  # older API name
-        params = None
+    params = pallas_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
     call = pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, n_k),

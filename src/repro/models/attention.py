@@ -3,8 +3,12 @@
 Long sequences use :func:`blocked_attention` — an online-softmax scan that
 streams KV blocks through the compute unit, the direct jnp analogue of the
 paper's systolic operand streaming (and the oracle for the
-``kernels/flash_attention`` Pallas kernel). Decode paths operate on fixed-
-size caches: dense for full attention, ring-buffer for sliding-window.
+``kernels/flash_attention`` Pallas kernel). When ``cfg.systolic_mode`` is a
+link mode (sw/xqueue/qlr) and the mesh/shapes admit it, the KV stream is
+realized as actual queue traffic: ``core/ring_attention`` keeps each query
+shard resident and hops K/V blocks around the 'model' ring. Decode paths
+operate on fixed-size caches: dense for full attention, ring-buffer for
+sliding-window.
 
 MLA decode uses the absorbed formulation (q projected into the latent space,
 attention performed against the compressed cache) so per-token FLOPs scale
@@ -151,12 +155,15 @@ def blocked_attention(q, k, v, *, causal: bool, window: int = 0,
 
     The KV stream is the systolic-queue analogue: each scan step pops one
     KV block, updates the running (max, normalizer, accumulator) — identical
-    math to the Pallas flash kernel, kept in pure jnp as its oracle.
+    math to the Pallas flash kernel, kept in pure jnp as its oracle. The
+    per-block update is shared with core/ring_attention, where the same
+    stream rides actual queue links; KV blocks stay unexpanded (GQA) until
+    each update consumes them.
     """
+    from repro.core.ring_attention import _block_update
     b, sq, h, hd = q.shape
     skv = k.shape[1]
-    k = _expand_kv(k, h)
-    v = _expand_kv(v, h)
+    kvh = k.shape[2]
     if skv % kv_block:
         pad = kv_block - skv % kv_block
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -164,29 +171,18 @@ def blocked_attention(q, k, v, *, causal: bool, window: int = 0,
     nblk = k.shape[1] // kv_block
     q32 = q.astype(jnp.float32)
     scale = 1.0 / math.sqrt(hd)
-    kb = k.reshape(b, nblk, kv_block, h, hd)
-    vb = v.reshape(b, nblk, kv_block, h, hd)
+    kb = k.reshape(b, nblk, kv_block, kvh, hd)
+    vb = v.reshape(b, nblk, kv_block, kvh, hd)
     q_pos = jnp.arange(sq)
 
     def step(carry, inputs):
-        m, l, acc = carry
         kblk, vblk, blk_idx = inputs
         k_pos = blk_idx * kv_block + jnp.arange(kv_block)
-        s = jnp.einsum("bshk,bthk->bhst", q32, kblk.astype(jnp.float32)) * scale
-        s = shard(s, "batch", "heads", None, None)
-        mask = k_pos[None, :] <= q_pos[:, None] if causal else jnp.ones(
-            (sq, kv_block), bool)
-        mask = jnp.logical_and(mask, (k_pos[None, :] < skv))
-        if window:
-            mask = jnp.logical_and(mask, q_pos[:, None] - k_pos[None, :] < window)
-        s = jnp.where(mask[None, None], s, _NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[..., None])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
-        acc_new = acc * corr[..., None] + jnp.einsum(
-            "bhst,bthk->bhsk", p, vblk.astype(jnp.float32))
-        return (m_new, l_new, acc_new), None
+        carry = _block_update(
+            carry, q32, kblk, vblk, q_pos, k_pos, causal=causal,
+            window=window, scale=scale, num_heads=h, k_len=skv,
+            score_hint=lambda s: shard(s, "batch", "heads", None, None))
+        return carry, None
 
     m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, h, sq), jnp.float32)
@@ -204,14 +200,32 @@ def gqa_forward(params, x, cfg: ModelConfig, positions=None, return_kv=False):
     if positions is None:
         positions = jnp.arange(s)[None, :].astype(jnp.int32)
     q, k, v = _qkv(params, x, cfg, positions)
-    if s >= BLOCKED_ATTN_THRESHOLD:
-        out = blocked_attention(q, k, v, causal=True, window=cfg.sliding_window)
-    else:
-        out = plain_attention(q, k, v, causal=True, window=cfg.sliding_window)
-    out = shard(out.astype(adtype(cfg)), "batch", "seq", "heads", "head_dim")
+    out = None
+    used_ring = False
     ctx = _systolic_attn_ctx(cfg)
+    if ctx is not None:
+        from repro.core import ring_attention as ra
+        if ra.ring_attn_applicable(q, k, ctx.mesh):
+            # the paper's streamed-operand schedule on the attention core:
+            # q shards stay resident, K/V blocks ride the 'model' ring
+            out = ra.systolic_ring_attention(
+                q, k, v, ctx.mesh, cfg.systolic_mode, causal=True,
+                window=cfg.sliding_window)
+            used_ring = True
+    if out is None:
+        if s >= BLOCKED_ATTN_THRESHOLD:
+            out = blocked_attention(q, k, v, causal=True,
+                                    window=cfg.sliding_window)
+        else:
+            out = plain_attention(q, k, v, causal=True,
+                                  window=cfg.sliding_window)
+    out = shard(out.astype(adtype(cfg)), "batch", "seq", "heads", "head_dim")
     sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)) if ctx else {}
-    if (ctx is not None and cfg.num_heads % max(sizes.get("model", 1), 1) == 0
+    # after ring attention the output is already sequence-sharded and the
+    # out-projection is local to each shard (wo is the resident multicast
+    # operand) — the head-sharded RS ring would only add a reshard
+    if (not used_ring and ctx is not None
+            and cfg.num_heads % max(sizes.get("model", 1), 1) == 0
             and sizes.get("model", 0) > 1 and s % sizes["model"] == 0):
         from repro.core import collective_matmul as cm
         # reduce-scatter ring: head-shard partials travel to seq owners

@@ -72,7 +72,10 @@ def _maybe_systolic_mlp(lp_mlp, h, cfg: ModelConfig):
 
     cfg.systolic_mode in {sw, xqueue, qlr} + an active mesh context + shapes
     that divide -> systolic sequence-parallel SwiGLU (AG-ring in, RS-ring
-    out); otherwise the baseline einsum path.
+    out); otherwise the baseline einsum path. The same switch routes the
+    attention core through core/ring_attention (wired inside
+    attention.gqa_forward, gated by ring_attn_applicable) so a systolic
+    block streams *both* its FFN and its K/V operands over queue links.
     """
     from repro.models.common import current_ctx
     ctx = current_ctx()

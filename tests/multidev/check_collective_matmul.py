@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import queues
 from repro.core.collective_matmul import (
     cannon_matmul,
@@ -49,7 +50,7 @@ for mode in ("baseline", "sw", "xqueue", "qlr"):
     def body(xl, w1_, w2_):
         o1, o2 = ring_ag_matmul(xl, [w1_, w2_], topo, mode)
         return o1, o2
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(P(None, "model", None), P(None, None), P(None, None)),
         out_specs=(P(None, None, None), P(None, None, None)),
@@ -65,7 +66,7 @@ ref = xh @ wd
 for mode in ("baseline", "sw", "xqueue", "qlr"):
     def body(xl, w):
         return ring_matmul_rs(xl, w, topo, mode)
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None, "model"), P("model", None)),
         out_specs=P(None, "model", None),
@@ -99,7 +100,7 @@ def cbody(al, bl):
 # lay out tiles: reshape A to [rows, cols, m, k] then index by device id
 a_t = a.reshape(rows, M // rows, cols, K // cols).swapaxes(1, 2).reshape(4, M // rows, K // cols)
 b_t = b.reshape(rows, K // rows, cols, N // cols).swapaxes(1, 2).reshape(4, K // rows, N // cols)
-fn = jax.jit(jax.shard_map(
+fn = jax.jit(shard_map(
     cbody, mesh=mesh, in_specs=(P("model"), P("model")),
     out_specs=P("model"), check_vma=False))
 c_t = fn(a_t, b_t)
@@ -132,7 +133,7 @@ def visit(xl):
     state, _ = queues.stream(ring("model", n), xl, n, consume,
                              jnp.zeros(()), "qlr")
     return state[None]
-fn = jax.jit(jax.shard_map(visit, mesh=mesh, in_specs=P("model"),
+fn = jax.jit(shard_map(visit, mesh=mesh, in_specs=P("model"),
                            out_specs=P("model"), check_vma=False))
 seen = fn(vals)
 # device 0 sees 0,3,2,1 -> 0 + 3*10 + 2*100 + 1*1000 = 1230
@@ -142,7 +143,7 @@ record("stream_order", float(seen[0]) == 1230.0, seen.tolist())
 def chain_visit(xl):
     moved = queues.hop(chains("model", n, 2), xl, "qlr")
     return moved
-fn = jax.jit(jax.shard_map(chain_visit, mesh=mesh, in_specs=P("model"),
+fn = jax.jit(shard_map(chain_visit, mesh=mesh, in_specs=P("model"),
                            out_specs=P("model"), check_vma=False))
 moved = fn(vals)
 record("chains_no_wrap",

@@ -65,6 +65,19 @@ def test_tiny_dryrun_multidev(tmp_path):
     assert "DRYRUN_OK" in proc.stdout, proc.stdout + proc.stderr[-3000:]
 
 
+def test_ring_attention_multidev():
+    """Sequence-parallel ring attention == all-gathered K/V reference in
+    every link mode (values and grads), plus GQA/window/non-causal cases."""
+    results = run_check("check_ring_attention.py")
+    for mode in ("baseline", "sw", "xqueue", "qlr"):
+        assert results[f"ring_attn_{mode}"]["ok"]
+    for mode in ("sw", "xqueue", "qlr"):
+        assert results[f"ring_attn_grad_{mode}"]["ok"]
+    assert results["ring_attn_gqa_qlr"]["ok"]
+    assert results["ring_attn_window_qlr"]["ok"]
+    assert results["ring_attn_noncausal_qlr"]["ok"]
+
+
 def test_systolic_model_parity_multidev():
     """Ring FFN + ring attention projections == baseline (loss & grads)."""
     results = run_check("check_systolic_model.py")

@@ -1,5 +1,12 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+``hypothesis`` is an optional dev dependency (see pyproject's ``dev``
+extra); without it this module degrades to a skip, not a collection error.
+"""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

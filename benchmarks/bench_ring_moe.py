@@ -1,0 +1,84 @@
+"""Expert-ring MoE link-mode sweep — the hybrid execution model on the
+routing-heavy workload class.
+
+Sweeps the four link modes x experts-per-token (top-k) on 8 fake devices
+(expert-parallel over a 'model' ring). Reported per (mode, k): wall time,
+static HLO op count (sw inflates with the software-FIFO bookkeeping of both
+ring passes), collective count, and MEMPOOL-modeled energy from the expert
+FLOPs and the per-class traffic split:
+
+  ring modes — token blocks (+ routing metadata) and expert-output buffers
+               ride the systolic links ((n-1)/n of both volumes, 2n hops);
+               gate weights and expert shards stay local;
+  baseline   — the same volumes move as shared-memory multicast
+               (all-gather) traffic instead.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.bench_ring_moe
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks.common import emit, hlo_counts, time_fn
+from repro.configs.base import ModelConfig
+from repro.core import energy
+from repro.core.ring_moe import MODES, systolic_ring_moe
+from repro.launch.mesh import make_mesh
+from repro.models import moe as moe_lib
+from repro.models.common import split_tree
+
+
+def run(n_dev: int = 8, topks=(1, 2, 4), e: int = 8, s: int = 256,
+        b: int = 2, d: int = 64, f: int = 128):
+    mesh = make_mesh((n_dev,), ("model",))
+    tok_spec = NamedSharding(mesh, P(None, "model", None))
+
+    for k in topks:
+        cfg = ModelConfig(
+            name=f"bench-top{k}", family="moe", d_model=d, d_ff=f,
+            d_ff_expert=f, num_experts=e, experts_per_token=k,
+            capacity_factor=2.0, dtype="float32", param_dtype="float32")
+        params, _ = split_tree(moe_lib.init_moe(jax.random.PRNGKey(0), cfg))
+        x = jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(1), (b, s, d), jnp.float32),
+            tok_spec)
+        cap = moe_lib.expert_capacity(cfg, s)
+
+        # expert FFN FLOPs (3 einsums over the capacity batch) + traffic:
+        # token blocks (x + int32 idx/pos metadata) and expert-output buffers
+        flops = 6 * b * e * cap * d * f
+        tok_bytes = b * s * (d + 2 * k) * 4
+        out_bytes = b * e * cap * d * 4
+
+        ref = None
+        for mode in MODES:
+            def fn(p, x, m=mode):
+                logits = jnp.einsum("bsd,de->bse", x, p["router"])
+                weights, idx, _ = moe_lib._topk_routing(logits, cfg)
+                pos = moe_lib._positions_in_expert(idx, e)
+                return systolic_ring_moe(x, idx, pos, weights, p["w_gate"],
+                                         p["w_up"], p["w_down"], cap, mesh, m)
+            fn = jax.jit(fn)
+            y = fn(params, x)
+            if ref is None:
+                ref = y
+            err = float(jnp.abs(y - ref).max())
+            assert err < 1e-4, (mode, k, err)
+            us = time_fn(fn, params, x)
+            counts = hlo_counts(fn, params, x)
+            vol = tok_bytes + out_bytes
+            link_bytes = 0 if mode == "baseline" else vol * (n_dev - 1) // n_dev
+            shared = vol if mode == "baseline" else vol // n_dev
+            acct = energy.account(energy.MEMPOOL, flops=flops,
+                                  local_bytes=shared, remote_bytes=link_bytes)
+            emit(f"ring_moe_{mode}_k{k}", us,
+                 f"ops={counts['total_ops']};"
+                 f"colls={counts['n_collectives']};"
+                 f"gopsw={acct.gops_per_w:.0f};pe={acct.pe_fraction:.2f}")
+
+
+if __name__ == "__main__":
+    run()

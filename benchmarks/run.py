@@ -23,6 +23,7 @@ BENCHES = {
     "benchmarks.bench_conv2d_chains": 16,    # paper Table III, Fig. 12/13
     "benchmarks.bench_cfft": 16,             # paper Fig. 14/15
     "benchmarks.bench_ring_attention": 8,    # hybrid rings on attention
+    "benchmarks.bench_ring_moe": 8,          # expert-ring MoE dispatch
     "benchmarks.bench_arch_step": 0,         # §VI-D per-arch summary
 }
 

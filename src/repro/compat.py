@@ -72,6 +72,29 @@ def _optimization_barrier_jvp(primals, tangents):
     return jax.lax.optimization_barrier(x), t
 
 
+# 0.4.x also lacks a vmap batching rule for the barrier primitive, which
+# breaks the single-device emulation of queue streams (topology axis mapped
+# onto a vmap named axis, see tests/test_property_systolic.py). The barrier
+# is semantically the identity, so batching it is the identity on batch
+# dims with the barrier kept on the batched values.
+def _register_optimization_barrier_batching() -> None:
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+    except ImportError:                             # pragma: no cover
+        return
+    if optimization_barrier_p in batching.primitive_batchers:
+        return                                      # newer jax: rule exists
+
+    def _batcher(args, dims):
+        return optimization_barrier_p.bind(*args), dims
+
+    batching.primitive_batchers[optimization_barrier_p] = _batcher
+
+
+_register_optimization_barrier_batching()
+
+
 # ---------------------------------------------------------------------------
 # Pallas TPU compiler params
 # ---------------------------------------------------------------------------

@@ -9,5 +9,7 @@ from repro.core import (
     halo,
     pipeline,
     queues,
+    ring_attention,
+    ring_moe,
     topology,
 )

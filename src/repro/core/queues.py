@@ -36,9 +36,14 @@ MODES = ("sw", "xqueue", "qlr")
 
 
 def hop(topo: Topology, x, mode: str = "qlr"):
-    """One systolic hop: push x to the linked neighbor, pop its operand."""
+    """One systolic hop: push x to the linked neighbor, pop its operand.
+
+    ``x`` may be a pytree: each leaf rides its own queue (the paper's
+    several-queues-per-PE layout — one FIFO per operand class), all hopping
+    the same topology in lockstep.
+    """
     if mode == "sw":
-        return _sw_hop(topo, x)
+        return jax.tree_util.tree_map(partial(_sw_hop, topo), x)
     return jax.lax.ppermute(x, topo.axis, topo.perm)
 
 

@@ -1,0 +1,200 @@
+"""Expert-parallel systolic MoE dispatch — the paper's hybrid execution
+model on the routing-heavy workload class.
+
+Mapping (DESIGN.md §5): each device keeps its **expert shard resident**
+(weight-stationary — the dual of ring attention, whose resident operand is
+the query shard), while routed **token blocks stream** around the
+``ring("model", n)`` topology via ``queues.stream``. Two ring passes:
+
+  dispatch — each device's token block, stacked with its routing metadata
+             (expert ids + per-expert arrival ranks) as one queue element,
+             hops the ring; per hop every device scatters the arriving
+             block's tokens that routed to *its* local experts into a
+             resident ``[B, e_local, C, D]`` capacity buffer. After n hops
+             the buffer holds exactly the local rows of the dense
+             ``[B, E, C, D]`` dispatch the shared-L1 baseline builds by
+             all-gather — without any device ever holding foreign experts.
+  ffn      — the local expert SwiGLU runs once over the capacity buffer
+             (compute identical to the baseline's batched einsums).
+  combine  — the per-device expert outputs stream the ring back; per hop
+             every device gathers from the arriving buffer the
+             contributions owed to its *own* resident tokens (gate-weighted
+             online accumulation), so after n hops the combined outputs
+             have ridden the ring back to their owners.
+
+Capacity/overflow semantics are bit-identical to the dense path: arrival
+ranks are computed globally (``models.moe._positions_in_expert``) before
+the blocks are sharded, so a token past its expert's capacity is dropped —
+its scatter lands on the drop sentinel and its gate weight is zeroed — on
+every link mode alike.
+
+Link modes (cf. core/queues.py): sw / xqueue / qlr, plus ``baseline`` —
+the shared-memory reference inside the same harness: token blocks and
+expert outputs move by all-gather (multicast reads) instead of queue hops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import queues
+from repro.core.collective_matmul import _batch_axes, _source_table
+from repro.core.topology import Topology, ring
+
+MODES = ("baseline",) + queues.MODES
+
+
+def _expert_ffn(xbuf, wg, wu, wd):
+    """Local expert SwiGLU over the capacity buffer.
+
+    xbuf: [B, e_local * C, D]; wg/wu: [e_local, D, F]; wd: [e_local, F, D].
+    Returns [B, e_local * C, D] in the promoted compute dtype.
+    """
+    b, ec, d = xbuf.shape
+    e_l = wg.shape[0]
+    xe = xbuf.reshape(b, e_l, ec // e_l, d)
+    gate = jnp.einsum("becd,edf->becf", xe, wg)
+    up = jnp.einsum("becd,edf->becf", xe, wu)
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("becf,efd->becd", h, wd)
+    return out.reshape(b, ec, d)
+
+
+def ring_moe(x_blk, idx_blk, pos_blk, w_blk, wg, wu, wd, topo: Topology,
+             cap: int, mode: str = "qlr"):
+    """shard_map-local expert-ring MoE over one ring topology.
+
+    x_blk:   [B, s_local, D]  — this device's token block (streamed).
+    idx_blk: [B, s_local, K] int32 — global expert id per assignment.
+    pos_blk: [B, s_local, K] int32 — global arrival rank within the expert
+             (rank >= cap marks a capacity-overflow drop).
+    w_blk:   [B, s_local, K] — gate weights (stay resident with the owner).
+    wg/wu:   [e_local, D, F], wd: [e_local, F, D] — the resident expert
+             shard; device d owns global experts [d*e_local, (d+1)*e_local).
+
+    Returns y_blk [B, s_local, D] fp32 — the combined MoE output for this
+    device's own tokens (the sharded store / gather collective).
+    """
+    assert mode in MODES, mode
+    n = topo.size
+    b, s_l, d = x_blk.shape
+    k = idx_blk.shape[-1]
+    e_l = wg.shape[0]
+    my = jax.lax.axis_index(topo.axis)
+    bi = jnp.arange(b, dtype=jnp.int32)[:, None, None]
+
+    def scatter_block(xbuf, x_b, idx_b, pos_b):
+        """Write the block's tokens routed to my experts into the capacity
+        buffer at their (local expert, arrival rank) slots; foreign and
+        overflowed assignments land on the drop sentinel."""
+        local = idx_b - my * e_l
+        ok = (local >= 0) & (local < e_l) & (pos_b < cap)
+        tgt = jnp.where(ok, local * cap + pos_b, e_l * cap)   # sentinel=drop
+        vals = jnp.broadcast_to(x_b[:, :, None, :],
+                                (b, x_b.shape[1], k, d))
+        return xbuf.at[bi, tgt].set(vals, mode="drop")
+
+    def gather_block(out_src, base):
+        """Collect from an expert-output buffer of origin ``base // e_l``
+        the gate-weighted contributions owed to my resident tokens."""
+        local = idx_blk - base
+        ok = (local >= 0) & (local < e_l) & (pos_blk < cap)
+        slot = jnp.clip(local * cap + pos_blk, 0, e_l * cap - 1)
+        vals = out_src[bi, slot]                              # [B,s_l,K,D]
+        w = (w_blk * ok.astype(w_blk.dtype))[..., None].astype(jnp.float32)
+        return jnp.sum(vals.astype(jnp.float32) * w, axis=2)
+
+    xbuf0 = jnp.zeros((b, e_l * cap, d), x_blk.dtype)
+
+    if mode == "baseline":
+        # shared-memory multicast: every PE reads every block ...
+        xs = jax.lax.all_gather(x_blk, topo.axis, axis=1, tiled=True)
+        idxs = jax.lax.all_gather(idx_blk, topo.axis, axis=1, tiled=True)
+        poss = jax.lax.all_gather(pos_blk, topo.axis, axis=1, tiled=True)
+        xbuf = scatter_block(xbuf0, xs, idxs, poss)
+        out_e = _expert_ffn(xbuf, wg, wu, wd)
+        # ... and every owner reads every expert's outputs
+        outs = jax.lax.all_gather(out_e, topo.axis, axis=0, tiled=False)
+        y = jnp.zeros((b, s_l, d), jnp.float32)
+        for src in range(n):
+            y = y + gather_block(outs[src], src * e_l)
+        return y
+
+    src_table = jnp.asarray(_source_table(topo))
+
+    # ---- pass 1: token blocks ride the ring, experts fill their buffers ---
+    def dispatch_consume(xbuf, blk, t):
+        x_b, idx_b, pos_b = blk
+        return scatter_block(xbuf, x_b, idx_b, pos_b)
+
+    xbuf, _ = queues.stream(topo, (x_blk, idx_blk, pos_blk), n,
+                            dispatch_consume, xbuf0, mode)
+
+    # ---- local expert FFN (weight-stationary) -----------------------------
+    out_e = _expert_ffn(xbuf, wg, wu, wd)
+
+    # ---- pass 2: expert outputs ride the ring back to the token owners ----
+    def combine_consume(y, out_src, t):
+        src = src_table[my, t]
+        return y + gather_block(out_src, src * e_l)
+
+    y0 = jnp.zeros((b, s_l, d), jnp.float32)
+    y, _ = queues.stream(topo, out_e, n, combine_consume, y0, mode)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# jit-level wrapper
+# ---------------------------------------------------------------------------
+
+
+def ring_moe_applicable(cfg, x, mesh: Mesh) -> bool:
+    """Shapes/config admit the expert-ring schedule on this mesh.
+
+    Requires experts to shard over the 'model' axis (expert parallelism);
+    sub-expert splits and shared experts keep the dense fallback — their
+    combine semantics (partial-sum slices, always-on experts) belong to the
+    shared-memory path.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes.get("model", 0)
+    if n < 2:
+        return False
+    if max(cfg.moe_subexperts, 1) > 1 or cfg.num_shared_experts:
+        return False
+    b, s, _ = x.shape
+    bsz = 1
+    for a in _batch_axes(mesh):
+        bsz *= sizes[a]
+    return cfg.num_experts % n == 0 and s % n == 0 and b % bsz == 0
+
+
+def systolic_ring_moe(x, idx, pos, weights, wg, wu, wd, cap: int,
+                      mesh: Mesh, mode: str = "qlr"):
+    """Expert-ring MoE over the 'model' axis: experts sharded (resident),
+    tokens streamed.
+
+    x: [B,S,D]; idx/pos: [B,S,K] int32; weights: [B,S,K] (global arrays,
+    routing already resolved — see models.moe.apply_moe); wg/wu: [E,D,F],
+    wd: [E,F,D]. Returns y [B,S,D] fp32, sequence-sharded over 'model'.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes["model"]
+    batch = _batch_axes(mesh)
+    topo = ring("model", n)
+    bspec = batch if batch else None
+    tok_spec = P(bspec, "model", None)
+    w_spec = P("model", None, None)
+
+    def body(x_l, idx_l, pos_l, w_l, wg_l, wu_l, wd_l):
+        return ring_moe(x_l, idx_l, pos_l, w_l, wg_l, wu_l, wd_l, topo,
+                        cap, mode)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(tok_spec, tok_spec, tok_spec, tok_spec,
+                  w_spec, w_spec, w_spec),
+        out_specs=tok_spec, check_vma=False)
+    return fn(x, idx, pos, weights, wg, wu, wd)

@@ -13,6 +13,12 @@ Sharding: the expert axis maps to the 'model' mesh axis when divisible
 (expert parallelism, DeepSeek 64/16=4); otherwise the capacity axis takes
 'model' (expert tensor parallelism, Mixtral 8<16) — resolved automatically
 by the logical-axis rules in models/common.py.
+
+When ``cfg.systolic_mode`` is a link mode (sw/xqueue/qlr) and the experts
+shard over the 'model' axis, the dense gather/scatter above is replaced by
+the expert-ring schedule of ``core/ring_moe``: expert shards stay resident
+(weight-stationary) and routed token blocks stream the ring as queue
+traffic. ``baseline`` keeps the dense shared-L1 path.
 """
 from __future__ import annotations
 
@@ -37,7 +43,7 @@ def init_moe(key, cfg: ModelConfig):
     d = cfg.d_model
     f = cfg.d_ff_expert or cfg.d_ff
     e = cfg.num_experts
-    ks = jax.random.split(key, 6)
+    ks = jax.random.split(key, 7)
     # sub-expert sharding: store [E*k, d, f/k]; the f-slices of one expert
     # are routed together and their down-proj partials sum in the combine
     sub = max(cfg.moe_subexperts, 1)
@@ -54,7 +60,7 @@ def init_moe(key, cfg: ModelConfig):
         p["shared"] = {
             "w_gate": param(ks[4], (d, fs), ("w_embed", "ff"), pdtype(cfg)),
             "w_up": param(ks[5], (d, fs), ("w_embed", "ff"), pdtype(cfg)),
-            "w_down": param(ks[4], (fs, d), ("ff", "w_embed"), pdtype(cfg)),
+            "w_down": param(ks[6], (fs, d), ("ff", "w_embed"), pdtype(cfg)),
         }
     return p
 
@@ -78,8 +84,10 @@ def _positions_in_expert(idx: jax.Array, e: int):
     """Rank of each assignment within its expert, per batch row.
 
     idx: [B,S,K] expert ids. Returns pos [B,S,K] (0-based arrival order,
-    priority: earlier token first, then lower k-slot). Computed with a scan
-    over the K slots to keep the one-hot cumsum transient at [B,S,E].
+    priority: lower k-slot first — every primary choice outranks every
+    secondary choice, standard top-k gating — then earlier token). Computed
+    with a scan over the K slots to keep the one-hot cumsum transient at
+    [B,S,E].
     """
     b, s, k = idx.shape
 
@@ -97,6 +105,36 @@ def _positions_in_expert(idx: jax.Array, e: int):
     return jnp.moveaxis(pos, 0, -1).astype(jnp.int32)          # [B,S,K]
 
 
+def _dispatch_indices(idx: jax.Array, pos: jax.Array, e: int, cap: int):
+    """Dense dispatch table from assignments.
+
+    idx/pos: [B,S,K] expert ids and arrival ranks. Returns [B,E,C] token
+    ids (sentinel = S for empty / overflowed slots): the gather pattern of
+    the shared-L1 dispatch, also the oracle for the ring schedule's
+    per-hop scatters (tests/test_moe_dispatch.py).
+    """
+    b, s, k = idx.shape
+    keep = pos < cap
+    tok = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :, None], (b, s, k))
+    b_idx = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None, None], (b, s, k))
+    slot = jnp.where(keep, pos, cap)                           # overflow -> slot C
+    dispatch = jnp.full((b, e, cap + 1), s, jnp.int32)
+    dispatch = dispatch.at[b_idx, idx, slot].set(tok)
+    return dispatch[:, :, :cap]                                # [B,E,C]
+
+
+def _ring_moe_mesh(cfg: ModelConfig, x):
+    """The active mesh when the expert-ring schedule applies, else None."""
+    if cfg.systolic_mode == "baseline":
+        return None
+    from repro.models.common import current_ctx
+    ctx = current_ctx()
+    if ctx is None:
+        return None
+    from repro.core.ring_moe import ring_moe_applicable
+    return ctx.mesh if ring_moe_applicable(cfg, x, ctx.mesh) else None
+
+
 def apply_moe(params, x, cfg: ModelConfig):
     """x: [B,S,D] -> (y [B,S,D], aux_loss scalar)."""
     dt = adtype(cfg)
@@ -107,6 +145,22 @@ def apply_moe(params, x, cfg: ModelConfig):
 
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
     weights, idx, aux = _topk_routing(logits, cfg)
+
+    ring_mesh = _ring_moe_mesh(cfg, x)
+    if ring_mesh is not None:
+        # the paper's streamed-operand schedule on MoE dispatch: expert
+        # shards stay resident, token blocks + routing metadata ride the
+        # 'model' ring (core/ring_moe; capacity math shared with the dense
+        # path below via _positions_in_expert)
+        from repro.core.ring_moe import systolic_ring_moe
+        pos = _positions_in_expert(idx, e)
+        y = systolic_ring_moe(
+            x.astype(dt), idx, pos, weights,
+            params["w_gate"].astype(dt), params["w_up"].astype(dt),
+            params["w_down"].astype(dt), cap, ring_mesh, cfg.systolic_mode)
+        y = y.astype(dt)
+        seq_ax = "seq_sp" if cfg.sequence_parallel else "seq"
+        return shard(y, "batch", seq_ax, "embed"), aux * cfg.router_aux_loss
 
     # expand to sub-experts: a token routed to expert e goes to sub-experts
     # e*sub .. e*sub+sub-1 with the same gate weight; their partial outputs
@@ -123,12 +177,7 @@ def apply_moe(params, x, cfg: ModelConfig):
     keep = pos < cap
 
     # ---- dispatch: build [B,E,C] token indices (sentinel = S) -------------
-    tok = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :, None], (b, s, k))
-    b_idx = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None, None], (b, s, k))
-    slot = jnp.where(keep, pos, cap)                           # overflow -> slot C
-    dispatch = jnp.full((b, e, cap + 1), s, jnp.int32)
-    dispatch = dispatch.at[b_idx, idx, slot].set(tok)
-    dispatch = dispatch[:, :, :cap]                            # [B,E,C]
+    dispatch = _dispatch_indices(idx, pos, e, cap)             # [B,E,C]
 
     x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
     x_e = jnp.take_along_axis(

@@ -1,0 +1,88 @@
+"""Single-device unit tests for the MoE dispatch math (models/moe.py):
+arrival-rank validity, capacity-overflow drop semantics, and the
+dispatch -> combine round trip — the invariants both the dense shared-L1
+path and the expert-ring schedule (core/ring_moe.py) are built on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models.common import split_tree
+
+
+def test_positions_form_valid_arrival_order():
+    """Per (batch row, expert), the ranks of its assignments — visited in
+    arrival priority (lower k-slot first: primary choices outrank secondary
+    ones; then earlier token) — must be exactly 0, 1, 2, ..."""
+    b, s, k, e = 2, 17, 3, 5
+    idx = jax.random.randint(jax.random.PRNGKey(0), (b, s, k), 0, e)
+    pos = np.asarray(moe_lib._positions_in_expert(idx, e))
+    idx = np.asarray(idx)
+    for bi in range(b):
+        for ei in range(e):
+            ranks = [pos[bi, si, ki] for ki in range(k) for si in range(s)
+                     if idx[bi, si, ki] == ei]
+            assert ranks == list(range(len(ranks))), (bi, ei, ranks)
+
+
+def test_dispatch_combine_roundtrips_token_identity():
+    """Every kept assignment's token id sits in its (expert, rank) slot of
+    the dispatch table, and the combine-side flat gather recovers it."""
+    b, s, k, e, cap = 2, 16, 2, 4, 8
+    scores = jax.random.normal(jax.random.PRNGKey(1), (b, s, e))
+    _, idx = jax.lax.top_k(scores, k)              # distinct experts per token
+    pos = moe_lib._positions_in_expert(idx, e)
+    disp = np.asarray(moe_lib._dispatch_indices(idx, pos, e, cap))  # [B,E,C]
+    idx_np, pos_np = np.asarray(idx), np.asarray(pos)
+    keep = pos_np < cap
+    for bi in range(b):
+        filled = set()
+        for si in range(s):
+            for ki in range(k):
+                if keep[bi, si, ki]:
+                    ei, ci = idx_np[bi, si, ki], pos_np[bi, si, ki]
+                    assert disp[bi, ei, ci] == si
+                    filled.add((ei, ci))
+        # every other slot holds the padding sentinel (token id S)
+        for ei in range(e):
+            for ci in range(cap):
+                if (ei, ci) not in filled:
+                    assert disp[bi, ei, ci] == s
+
+    # combine gather (the flat-index math in apply_moe) round-trips
+    gidx = idx * cap + jnp.minimum(pos, cap - 1)
+    flat = jnp.asarray(disp).reshape(b, e * cap)
+    got = np.asarray(jnp.take_along_axis(
+        flat, gidx.reshape(b, s * k), axis=1)).reshape(b, s, k)
+    tok = np.broadcast_to(np.arange(s)[None, :, None], (b, s, k))
+    assert (got[keep] == tok[keep]).all()
+
+
+def test_capacity_overflow_drops_tokens_with_zero_weight():
+    """With a zero router every token top-1 routes to expert 0 (ties break
+    to the lowest index), so arrival rank == token order: tokens past the
+    expert's capacity must contribute exactly zero output."""
+    cfg = ModelConfig(name="t", family="moe", d_model=8, d_ff=16,
+                      d_ff_expert=16, num_experts=4, experts_per_token=1,
+                      capacity_factor=1.0, dtype="float32",
+                      param_dtype="float32")
+    params, _ = split_tree(moe_lib.init_moe(jax.random.PRNGKey(0), cfg))
+    params["router"] = jnp.zeros_like(params["router"])
+    s = 64
+    cap = moe_lib.expert_capacity(cfg, s)
+    assert cap < s, "test must overflow"
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, 8), jnp.float32)
+    y, _ = moe_lib.apply_moe(params, x, cfg)
+    y = np.asarray(y)
+    assert np.abs(y[:, cap:]).max() == 0.0         # dropped: weight zeroed
+    kept_norms = np.linalg.norm(y[:, :cap], axis=-1)
+    assert (kept_norms > 0).all()                  # kept: expert 0's output
+
+
+def test_expert_capacity_bounds():
+    cfg = ModelConfig(num_experts=8, experts_per_token=2, capacity_factor=1.25)
+    for s in (16, 64, 1024, 4096):
+        c = moe_lib.expert_capacity(cfg, s)
+        assert c % 16 == 0 and c >= 16             # padded, floored
+        assert c <= ((s * 2 + 15) // 16) * 16      # never above total demand

@@ -78,6 +78,19 @@ def test_ring_attention_multidev():
     assert results["ring_attn_noncausal_qlr"]["ok"]
 
 
+def test_ring_moe_multidev():
+    """Expert-ring MoE == dense gather/scatter dispatch in every link mode
+    (values and grads, incl. top-2 routing with capacity overflow)."""
+    results = run_check("check_ring_moe.py")
+    for mode in ("baseline", "sw", "xqueue", "qlr"):
+        assert results[f"ring_moe_{mode}"]["ok"]
+    for mode in ("sw", "xqueue", "qlr"):
+        assert results[f"ring_moe_model_{mode}"]["ok"]
+        assert results[f"ring_moe_grad_{mode}"]["ok"]
+        assert results[f"ring_moe_overflow_{mode}"]["ok"]
+    assert results["ring_moe_gate"]["ok"]
+
+
 def test_systolic_model_parity_multidev():
     """Ring FFN + ring attention projections == baseline (loss & grads)."""
     results = run_check("check_systolic_model.py")

@@ -1,0 +1,185 @@
+"""Hypothesis property tests for the systolic substrate itself: topology
+permutations (core/topology.py) and the queue-stream driver
+(core/queues.stream) — until now these invariants were only exercised
+kernel-by-kernel through the multidev checks.
+
+The stream properties run on a single device by mapping the topology axis
+onto a ``jax.vmap(..., axis_name=...)`` axis: collectives (ppermute) batch
+over vmap axes exactly as over mesh axes, so the mode semantics are
+preserved without fake devices.
+
+``hypothesis`` is an optional dev dependency (see pyproject's ``dev``
+extra); without it this module degrades to a skip, not a collection error.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queues
+from repro.core.topology import chains, ring, snake_ring, torus_shift
+
+SETTINGS = dict(deadline=None, max_examples=20)
+
+
+def _follow(perm: tuple, start: int, steps: int) -> list[int]:
+    nxt = dict(perm)
+    node, seen = start, [start]
+    for _ in range(steps):
+        node = nxt[node]
+        seen.append(node)
+    return seen
+
+
+# --- ring / torus / snake perms are bijections over the axis ----------------
+@settings(**SETTINGS)
+@given(size=st.sampled_from([2, 3, 4, 6, 8, 16]), step=st.integers(1, 5))
+def test_ring_perm_is_bijection(size, step):
+    t = ring("pe", size, step)
+    srcs = [s for s, _ in t.perm]
+    dsts = [d for _, d in t.perm]
+    assert sorted(srcs) == list(range(size))
+    assert sorted(dsts) == list(range(size))
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([2, 3, 4]), cols=st.sampled_from([2, 4, 8]),
+       direction=st.sampled_from(["right", "down"]))
+def test_torus_perm_is_bijection(rows, cols, direction):
+    t = torus_shift("pe", rows, cols, direction=direction)
+    size = rows * cols
+    assert sorted(s for s, _ in t.perm) == list(range(size))
+    assert sorted(d for _, d in t.perm) == list(range(size))
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([2, 3, 4]), cols=st.sampled_from([2, 4, 8]))
+def test_snake_ring_single_cycle_visits_all(rows, cols):
+    t = snake_ring("pe", rows, cols)
+    size = rows * cols
+    assert sorted(s for s, _ in t.perm) == list(range(size))
+    assert sorted(d for _, d in t.perm) == list(range(size))
+    # one full cycle: `size` hops from any node return to it having
+    # visited every node exactly once
+    walk = _follow(t.perm, 0, size)
+    assert walk[-1] == 0
+    assert sorted(walk[:-1]) == list(range(size))
+
+
+# --- chains: cycle-free with exactly n_chains heads -------------------------
+@settings(**SETTINGS)
+@given(length=st.sampled_from([2, 3, 4, 8]), n_chains=st.sampled_from([1, 2, 4]))
+def test_chains_are_acyclic_with_heads(length, n_chains):
+    size = length * n_chains
+    t = chains("pe", size, n_chains)
+    assert len(t.perm) == size - n_chains          # no wrap-around links
+    dsts = [d for _, d in t.perm]
+    assert len(set(dsts)) == len(dsts)             # at most one incoming
+    heads = set(range(size)) - set(dsts)           # nodes nothing points to
+    assert heads == {c * length for c in range(n_chains)}
+    nxt = dict(t.perm)
+    covered = set()
+    for head in heads:                             # each chain terminates
+        node, seen = head, [head]
+        while node in nxt:
+            node = nxt[node]
+            assert node not in seen, "cycle in chains topology"
+            seen.append(node)
+        assert len(seen) == length
+        covered.update(seen)
+    assert covered == set(range(size))
+
+
+# --- Topology accessors consistent with the raw perm ------------------------
+@settings(**SETTINGS)
+@given(size=st.sampled_from([4, 8, 16]), kind=st.sampled_from(
+    ["ring", "chains", "snake", "torus"]))
+def test_neighbors_and_sources_match_perm(size, kind):
+    t = {"ring": lambda: ring("pe", size),
+         "chains": lambda: chains("pe", size, 2),
+         "snake": lambda: snake_ring("pe", 2, size // 2),
+         "torus": lambda: torus_shift("pe", 2, size // 2, direction="down"),
+         }[kind]()
+    assert t.sources == {s for s, _ in t.perm}
+    for i in range(size):
+        assert t.neighbors_of(i) == [d for s, d in t.perm if s == i]
+    if kind != "chains":                           # full perms: 1-in / 1-out
+        for i in range(size):
+            assert len(t.neighbors_of(i)) == 1
+        assert t.sources == set(range(size))
+
+
+# --- queues.stream: mode equivalence + ring return --------------------------
+def _vmap_stream(topo, xs, n_steps, consume, state0, mode):
+    """Run the per-device stream body with the topology axis realized as a
+    vmap named axis (single real device)."""
+    def device_fn(x, s0):
+        return queues.stream(topo, x, n_steps, consume, s0, mode)
+    return jax.vmap(device_fn, axis_name=topo.axis)(xs, state0)
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 100))
+def test_stream_modes_identical_and_buffer_returns_home(n, seed):
+    """For a pure consume, sw/xqueue/qlr are schedule variants of the same
+    math — states must be identical — and after ``size`` hops on a ring
+    every buffer is back at its origin."""
+    topo = ring("pe", n)
+    # integer-valued floats: every product/sum below is exact in fp32, so
+    # "identical" means bitwise equal, not merely close
+    xs = jax.random.randint(jax.random.PRNGKey(seed), (n, 3), -8, 8
+                            ).astype(jnp.float32)
+    state0 = jnp.zeros((n, 3), jnp.float32)
+
+    def consume(state, buf, t):
+        return state + (t + 1.0) * buf             # order-sensitive on purpose
+
+    states = {}
+    for mode in queues.MODES:
+        state, buf = _vmap_stream(topo, xs, n, consume, state0, mode)
+        np.testing.assert_array_equal(np.asarray(buf), np.asarray(xs))
+        states[mode] = np.asarray(state)
+    np.testing.assert_array_equal(states["sw"], states["xqueue"])
+    np.testing.assert_array_equal(states["xqueue"], states["qlr"])
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([2, 4, 8]), seed=st.integers(0, 100))
+def test_stream_visits_every_shard_exactly_once(n, seed):
+    topo = ring("pe", n)
+    xs = jax.random.normal(jax.random.PRNGKey(seed), (n, 2), jnp.float32)
+    state0 = jnp.zeros((n, 2), jnp.float32)
+    state, _ = _vmap_stream(topo, xs, n, lambda s, b, t: s + b, state0, "qlr")
+    # every device accumulated the sum of all shards (each seen once)
+    expect = np.broadcast_to(np.asarray(xs).sum(0), (n, 2))
+    np.testing.assert_allclose(np.asarray(state), expect, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([2, 4]), seed=st.integers(0, 50))
+def test_stream_pytree_payload_all_modes(n, seed):
+    """A queue element may be a pytree (ring MoE streams token blocks with
+    their int routing metadata): every leaf hops in lockstep, every mode
+    agrees, and the tuple returns to its origin intact."""
+    topo = ring("pe", n)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    xs = (jax.random.randint(ks[0], (n, 3), -8, 8).astype(jnp.float32),
+          jax.random.randint(ks[1], (n, 2), 0, 100, jnp.int32))
+    state0 = jnp.zeros((n, 3), jnp.float32)
+
+    def consume(state, buf, t):
+        f, i = buf
+        return state + f * (1.0 + jnp.sum(i).astype(jnp.float32))
+
+    states = []
+    for mode in queues.MODES:
+        state, (f_buf, i_buf) = _vmap_stream(topo, xs, n, consume, state0, mode)
+        np.testing.assert_array_equal(np.asarray(f_buf), np.asarray(xs[0]))
+        np.testing.assert_array_equal(np.asarray(i_buf), np.asarray(xs[1]))
+        states.append(np.asarray(state))
+    np.testing.assert_array_equal(states[0], states[1])
+    np.testing.assert_array_equal(states[1], states[2])

@@ -288,6 +288,9 @@ class ServeConfig:
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    bos_token: int = 0        # seed token for empty prompts
+    prefill_chunk: int = 0    # block-prefill up to this many prompt tokens
+                              # at admission (0 = stream everything)
 
 
 # ---------------------------------------------------------------------------

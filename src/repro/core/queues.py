@@ -100,6 +100,50 @@ def stream(topo: Topology, x0, n_steps: int,
     return state, buf
 
 
+def stream_carry(topo: Topology, static0, carry0, n_steps: int,
+                 update: Callable[[Any, Any, Any], Any], mode: str = "qlr",
+                 unroll: bool = True):
+    """Drive a systolic stream whose element *itself* carries state.
+
+    ``stream`` keeps per-PE state resident and forwards the operand
+    unchanged; here the traveling element is (static, carry) and each
+    holder folds its **resident** operand into the carried part —
+    ``update(static, carry, step_index) -> carry`` — before the element
+    hops on. This is the decode-attention schedule: the per-token query
+    (static) rides the ring with its online-softmax state (carry), visiting
+    every resident KV shard, and arrives home complete after ``n_steps``
+    hops of an n-cycle topology.
+
+    qlr: the static leaves' hop is issued *before* the update, so the next
+    element's immutable part streams in while the PE is still folding the
+    current one (QLRs pre-popping the next operand); the carried leaves
+    necessarily hop after the update — a true data dependency, not a false
+    one, so only the static half overlaps.
+    xqueue/sw: the whole element is serialized — update, barrier, hop.
+
+    Returns (static, carry) after ``n_steps`` hops.
+    """
+    assert mode in MODES, mode
+
+    def body(cur, t):
+        static, carry = cur
+        if mode == "qlr":
+            nxt_static = hop(topo, static, mode)    # overlappable pre-pop
+            carry = update(static, carry, t)
+            nxt_carry = hop(topo, carry, mode)
+        else:
+            carry = update(static, carry, t)
+            static, carry = optimization_barrier((static, carry))
+            nxt_static = hop(topo, static, mode)
+            nxt_carry = hop(topo, carry, mode)
+        return (nxt_static, nxt_carry), None
+
+    (static, carry), _ = jax.lax.scan(
+        body, (static0, carry0), jnp.arange(n_steps),
+        unroll=n_steps if unroll else 1)
+    return static, carry
+
+
 def multicast(x, axis: str):
     """Shared-memory multicast: every device reads the same operand
     (all-gather). The paper's concurrent-load collective."""

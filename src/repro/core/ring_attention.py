@@ -180,3 +180,139 @@ def systolic_ring_attention(q, k, v, mesh: Mesh, mode: str = "qlr", *,
     fn = shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
                    out_specs=spec, check_vma=False)
     return fn(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode: resident KV shards, streamed queries (the serving dual)
+# ---------------------------------------------------------------------------
+
+
+def _decode_update(state, q32, k_blk, v_blk, valid, *, scale: float,
+                   num_heads: int):
+    """One decode online-softmax step with a per-row validity mask.
+
+    q32: [b,1,H,hd] fp32; k_blk/v_blk: [b,t,Kv,hd]; valid: [b,t] bool
+    (continuous batching: every row decodes at its own cache position, so
+    the mask is per-row, unlike the shared position grid of _block_update).
+    """
+    m, l, acc = state
+    ke = _expand_kv(k_blk, num_heads).astype(jnp.float32)
+    ve = _expand_kv(v_blk, num_heads).astype(jnp.float32)
+    s = jnp.einsum("bshk,bthk->bhst", q32, ke) * scale     # [b,H,1,t]
+    s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum("bhst,bthk->bhsk", p, ve)
+    return m_new, l_new, acc_new
+
+
+def ring_decode_attention(q_local, k_all, v_all, pos_all, topo: Topology,
+                          mode: str = "qlr"):
+    """shard_map-local systolic decode attention over one ring topology —
+    the dual of :func:`ring_attention`: the KV cache shard is the
+    **resident** operand (weight-stationary, like the expert shards in
+    ring_moe) and the per-token queries are the **streamed** one.
+
+    q_local:     [b_loc, 1, H, hd] — this device's slice of the decode
+                 batch; rides the ring with its online-softmax state via
+                 ``queues.stream_carry`` and returns home complete.
+    k_all/v_all: [B, s_loc, Kv, hd] — this device's cache-slot shard for
+                 *all* rows (global slots [my*s_loc, (my+1)*s_loc)).
+    pos_all:     [B] int32 — per-row positions; cache slot j is valid for
+                 row b iff its global index <= pos_all[b] (the slot at
+                 ``pos`` was written by this step's token, cf. gqa_decode).
+
+    Returns [b_loc, 1, H, hd] fp32 — this device's slice of the outputs.
+    """
+    assert mode in MODES, mode
+    n = topo.size
+    b_loc, _, h, hd = q_local.shape
+    s_loc = k_all.shape[1]
+    my = jax.lax.axis_index(topo.axis)
+    scale = 1.0 / math.sqrt(hd)
+    q32 = q_local.astype(jnp.float32)
+    slot_pos = my * s_loc + jnp.arange(s_loc)               # global indices
+
+    if mode == "baseline":
+        # shared-memory multicast: every PE reads the full cache, then one
+        # dense pass for its own query slice
+        ks = jax.lax.all_gather(k_all, topo.axis, axis=1, tiled=True)
+        vs = jax.lax.all_gather(v_all, topo.axis, axis=1, tiled=True)
+        k_my = jax.lax.dynamic_slice_in_dim(ks, my * b_loc, b_loc, 0)
+        v_my = jax.lax.dynamic_slice_in_dim(vs, my * b_loc, b_loc, 0)
+        pos_my = jax.lax.dynamic_slice_in_dim(pos_all, my * b_loc, b_loc, 0)
+        valid = jnp.arange(n * s_loc)[None, :] <= pos_my[:, None]
+        m0 = jnp.full((b_loc, h, 1), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b_loc, h, 1), jnp.float32)
+        acc0 = jnp.zeros((b_loc, h, 1, hd), jnp.float32)
+        m, l, acc = _decode_update((m0, l0, acc0), q32, k_my, v_my, valid,
+                                   scale=scale, num_heads=h)
+    else:
+        src_table = jnp.asarray(_source_table(topo))
+
+        def update(q_stream, state, t):
+            # the element on this device at hop t originated at src; fold
+            # the resident cache slots for *that* slice's rows into it
+            src = src_table[my, t]
+            k_blk = jax.lax.dynamic_slice_in_dim(k_all, src * b_loc, b_loc, 0)
+            v_blk = jax.lax.dynamic_slice_in_dim(v_all, src * b_loc, b_loc, 0)
+            pos_blk = jax.lax.dynamic_slice_in_dim(pos_all, src * b_loc,
+                                                   b_loc, 0)
+            valid = slot_pos[None, :] <= pos_blk[:, None]   # [b_loc, s_loc]
+            return _decode_update(state, q_stream.astype(jnp.float32),
+                                  k_blk, v_blk, valid, scale=scale,
+                                  num_heads=h)
+
+        m0 = jnp.full((b_loc, h, 1), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b_loc, h, 1), jnp.float32)
+        acc0 = jnp.zeros((b_loc, h, 1, hd), jnp.float32)
+        _, (m, l, acc) = queues.stream_carry(
+            topo, q32, (m0, l0, acc0), n, update, mode)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # [b_loc,H,1,hd]
+    return out.transpose(0, 2, 1, 3)                        # [b_loc,1,H,hd]
+
+
+def ring_decode_applicable(q, k_cache, mesh: Mesh) -> bool:
+    """Shapes admit the ring-sharded decode schedule on this mesh: a model
+    ring of >= 2, cache slots dividing it, and the decode batch dividing
+    (batch shards x ring size) so every device owns a query slice."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes.get("model", 0)
+    if n < 2:
+        return False
+    b, sq, h, _ = q.shape
+    kvh = k_cache.shape[2]
+    bsz = 1
+    for a in _batch_axes(mesh):
+        bsz *= sizes[a]
+    return (sq == 1 and k_cache.shape[0] == b
+            and k_cache.shape[1] % n == 0 and b % (bsz * n) == 0
+            and h % kvh == 0)
+
+
+def systolic_ring_decode(q, k_cache, v_cache, pos, mesh: Mesh,
+                         mode: str = "qlr"):
+    """Ring-sharded decode attention over the 'model' axis.
+
+    q: [B,1,H,hd]; k_cache/v_cache: [B,S,Kv,hd] (global); pos: [B]. The
+    cache is sequence-sharded over the ring (each device's resident slots),
+    the decode batch is sharded over (batch axes x 'model') so each device
+    streams its own query slice. Returns [B,1,H,hd] fp32, batch-sharded the
+    same way.
+    """
+    batch = _batch_axes(mesh)
+    topo = ring("model", mesh.shape["model"])
+    q_spec = P(batch + ("model",), None, None, None)
+    kv_spec = P(batch if batch else None, "model", None, None)
+    pos_spec = P(batch if batch else None)
+
+    def body(q_l, k_l, v_l, pos_l):
+        return ring_decode_attention(q_l, k_l, v_l, pos_l, topo, mode)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(q_spec, kv_spec, kv_spec, pos_spec),
+                   out_specs=q_spec, check_vma=False)
+    return fn(q, k_cache, v_cache, pos)

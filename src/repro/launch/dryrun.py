@@ -145,7 +145,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         params_sds, _ = step_lib.params_shapes(cfg, mesh)
         cache_sds, _ = step_lib.cache_shapes(cfg, shape, mesh)
         batch_sds, _ = step_lib.batch_shapes(cfg, shape, mesh)
-        lowered = jax.jit(step).lower(params_sds, cache_sds, batch_sds["tokens"])
+        lowered = jax.jit(step).lower(params_sds, cache_sds,
+                                      batch_sds["tokens"], batch_sds["active"])
     meta = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",

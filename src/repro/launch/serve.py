@@ -1,6 +1,14 @@
 """Serving driver: batched continuous-batching engine on a smoke config.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --requests 8
+
+The same host-side scheduler drives two backends:
+  --backend dense         one jitted decode step, cache wherever jit puts it
+  --backend ring          KV cache ring-sharded along the 'model' mesh axis,
+                          queries streamed systolically (--mode sw/xqueue/
+                          qlr, or baseline for the all-gather reference).
+For the ring backend pass --mesh DxM (e.g. 2x4 on 8 devices); run under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to try it on CPU.
 """
 from __future__ import annotations
 
@@ -14,6 +22,16 @@ import jax
 from repro.configs import ServeConfig, apply_overrides, get_config, get_smoke_config
 from repro.models import build_model, split_tree
 from repro.serve.engine import ServeEngine
+from repro.serve.sharded_cache import RingShardedBackend
+
+
+def _make_mesh(spec: str):
+    from jax.sharding import Mesh
+    d, m = (int(x) for x in spec.lower().split("x"))
+    n = d * m
+    devs = np.asarray(jax.devices()[:n]).reshape(d, m)
+    assert devs.size == n, f"need {n} devices for mesh {spec}"
+    return Mesh(devs, ("data", "model"))
 
 
 def main(argv=None):
@@ -26,14 +44,27 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--backend", choices=("dense", "ring"), default="dense")
+    ap.add_argument("--mode", default="qlr",
+                    choices=("baseline", "sw", "xqueue", "qlr"),
+                    help="ring link mode (ignored for --backend dense)")
+    ap.add_argument("--mesh", default="1x4",
+                    help="DATAxMODEL mesh for --backend ring, e.g. 2x4")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="block-prefill up to this many prompt tokens")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     scfg = ServeConfig(max_batch=args.max_batch, max_seq_len=args.max_seq,
-                       temperature=args.temperature)
+                       temperature=args.temperature,
+                       prefill_chunk=args.prefill_chunk)
     model = build_model(cfg)
     params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
-    engine = ServeEngine(cfg, scfg, params)
+    backend = None
+    if args.backend == "ring":
+        backend = RingShardedBackend(cfg, scfg, params, _make_mesh(args.mesh),
+                                     mode=args.mode)
+    engine = ServeEngine(cfg, scfg, params, backend=backend)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -47,8 +78,9 @@ def main(argv=None):
     ticks = engine.run()
     dt = time.perf_counter() - t0
     total_new = sum(len(r.out_tokens) for r in reqs)
-    print(f"served {len(reqs)} requests, {total_new} tokens, "
-          f"{ticks} engine ticks, {total_new / dt:.1f} tok/s")
+    print(f"served {len(reqs)} requests ({engine.backend.name}), "
+          f"{total_new} tokens, {ticks} engine ticks, "
+          f"{total_new / dt:.1f} tok/s")
     for r in reqs[:4]:
         print(f"  rid={r.rid} prompt_len={len(r.prompt)} out={r.out_tokens}")
 

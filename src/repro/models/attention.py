@@ -268,7 +268,12 @@ GQA_CACHE_AXES = {
 def gqa_decode(params, x, cache, cfg: ModelConfig, active=None):
     """One-token decode. x: [B,1,D]; per-row positions; rows with
     active=False neither write the cache nor advance (continuous batching).
-    Returns (y [B,1,D], new cache)."""
+
+    When ``cfg.systolic_mode`` is a link mode and the mesh/shapes admit it
+    (``ring_decode_applicable``), the attention core runs the decode dual
+    of the ring schedule: the cache shards stay resident along the 'model'
+    ring and each row's query streams around them with carried
+    online-softmax state. Returns (y [B,1,D], new cache)."""
     pos = cache["pos"]                                       # [B]
     b = x.shape[0]
     q, k, v = _qkv(params, x, cfg, pos[:, None].astype(jnp.int32))
@@ -283,30 +288,39 @@ def gqa_decode(params, x, cache, cfg: ModelConfig, active=None):
     k_all = shard(k_all, "cache_batch", "cache_seq", "kv_heads", "head_dim")
     v_all = shard(v_all, "cache_batch", "cache_seq", "kv_heads", "head_dim")
 
-    slot = jnp.arange(s_cache)
-    pos_c = pos[:, None]                                     # [B,1]
-    if cfg.sliding_window:
-        # ring buffer: entry age = pos - stored position; all valid once full
-        wrap = jnp.mod(pos_c, s_cache)
-        stored_pos = jnp.where(slot[None] <= wrap,
-                               pos_c - (wrap - slot[None]),
-                               pos_c - (wrap + s_cache - slot[None]))
-        valid = jnp.logical_and(stored_pos >= 0,
-                                pos_c - stored_pos < cfg.sliding_window)
-    else:
-        valid = slot[None] <= pos_c                          # [B, S]
+    out = None
+    ctx = _systolic_attn_ctx(cfg)
+    if ctx is not None and not cfg.sliding_window:
+        from repro.core import ring_attention as ra
+        if ra.ring_decode_applicable(q, k_all, ctx.mesh):
+            out = ra.systolic_ring_decode(q, k_all, v_all, pos, ctx.mesh,
+                                          cfg.systolic_mode)
+    if out is None:
+        slot = jnp.arange(s_cache)
+        pos_c = pos[:, None]                                 # [B,1]
+        if cfg.sliding_window:
+            # ring buffer: entry age = pos - stored position; all valid
+            # once full
+            wrap = jnp.mod(pos_c, s_cache)
+            stored_pos = jnp.where(slot[None] <= wrap,
+                                   pos_c - (wrap - slot[None]),
+                                   pos_c - (wrap + s_cache - slot[None]))
+            valid = jnp.logical_and(stored_pos >= 0,
+                                    pos_c - stored_pos < cfg.sliding_window)
+        else:
+            valid = slot[None] <= pos_c                      # [B, S]
 
-    b, _, h, hd = q.shape
-    ke = _expand_kv(k_all, h)
-    ve = _expand_kv(v_all, h)
-    ke = shard(ke, "cache_batch", "cache_seq", "heads", "head_dim")
-    ve = shard(ve, "cache_batch", "cache_seq", "heads", "head_dim")
-    scale = 1.0 / math.sqrt(hd)
-    scores = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32),
-                        ke.astype(jnp.float32)) * scale      # [B,H,1,S]
-    scores = jnp.where(valid[:, None, None, :], scores, _NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhst,bthk->bshk", probs, ve.astype(jnp.float32))
+        h, hd = q.shape[2], q.shape[3]
+        ke = _expand_kv(k_all, h)
+        ve = _expand_kv(v_all, h)
+        ke = shard(ke, "cache_batch", "cache_seq", "heads", "head_dim")
+        ve = shard(ve, "cache_batch", "cache_seq", "heads", "head_dim")
+        scale = 1.0 / math.sqrt(hd)
+        scores = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32),
+                            ke.astype(jnp.float32)) * scale  # [B,H,1,S]
+        scores = jnp.where(valid[:, None, None, :], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhst,bthk->bshk", probs, ve.astype(jnp.float32))
     out = out.astype(adtype(cfg))
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(adtype(cfg)))
     new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)

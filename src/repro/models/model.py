@@ -4,7 +4,7 @@ Every family exposes:
   init(key) -> Param tree
   loss(params, batch) -> (scalar, metrics)          [train_* shapes]
   prefill(params, batch) -> last-position logits    [prefill_* shapes]
-  decode_step(params, cache, tokens) -> (logits, cache)  [decode_* shapes]
+  decode_step(params, cache, tokens, active) -> (logits, cache)  [decode_*]
   init_cache(batch, seq_len) / cache_axes()
 plus `input_specs(shape)` producing ShapeDtypeStruct stand-ins + logical
 axes for the dry-run (no device allocation).
@@ -43,8 +43,11 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig):
     i32 = jnp.int32
 
     if shape.kind == "decode":
-        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
-        axes = {"tokens": ("cache_batch", None)}
+        # the serving step's true signature: per-step token batch plus the
+        # continuous-batching row mask (serve/engine.py drives exactly this)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                 "active": jax.ShapeDtypeStruct((b,), jnp.bool_)}
+        axes = {"tokens": ("cache_batch", None), "active": ("cache_batch",)}
         return specs, axes
 
     specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}

@@ -108,6 +108,21 @@ def block_forward(lp, x, cfg: ModelConfig, moe_layer: bool = False):
     return shard_residual(x + y, cfg), aux
 
 
+def block_prefill(lp, x, cfg: ModelConfig, moe_layer: bool = False):
+    """block_forward variant that also returns the post-rope K/V of the
+    attention sublayer, for seeding a decode cache (multi-token prefill).
+    Routes through ring_attention when cfg.systolic_mode is a link mode."""
+    h = apply_norm(lp["norm1"], x, cfg)
+    a, (k, v) = attn.gqa_forward(lp["attn"], h, cfg, return_kv=True)
+    x = x + a
+    h = apply_norm(lp["norm2"], x, cfg)
+    if moe_layer:
+        y, _ = moe_lib.apply_moe(lp["moe"], h, cfg)
+    else:
+        y = _maybe_systolic_mlp(lp["mlp"], h, cfg)
+    return shard_residual(x + y, cfg), (k, v)
+
+
 def block_decode(lp, x, cache, cfg: ModelConfig, moe_layer: bool = False,
                  active=None):
     h = apply_norm(lp["norm1"], x, cfg)
@@ -243,6 +258,61 @@ class TransformerLM:
         if cfg.first_k_dense:
             out["dense_layers"] = dict(padded)
         return out
+
+    def prefill_into_cache(self, params, cache, tokens, row, length):
+        """Batched prefill of one slot: run the full-sequence forward over
+        ``tokens`` [C] and write the post-rope K/V of positions [0, C) into
+        cache row ``row``, setting its position to ``length``.
+
+        ``length`` <= C masks nothing in the forward (pad positions past it
+        are computed but their cache slots are never read before the decode
+        loop overwrites them: slot validity is ``slot <= pos``). In systolic
+        modes the forward's attention core is the existing ring_attention
+        schedule, so prefill streams K/V blocks over the same links the
+        decode hop uses. The forward runs at the cache's full slot-batch
+        width (every row sees the same tokens; only ``row`` is written) so
+        the systolic paths' batch sharding stays applicable — the redundant
+        rows are the price of a fixed-shape jitted prefill. GQA-family
+        caches only (no MLA / sliding window).
+
+        Returns (logits [V] at position length-1, new cache).
+        """
+        cfg = self.cfg
+        assert cfg.attention_type == "gqa" and not cfg.sliding_window
+        c = tokens.shape[0]
+        b = cache["layers"]["pos"].shape[1]
+        x = embed(params["embed"],
+                  jnp.broadcast_to(tokens[None], (b, c)), cfg)  # [B,C,D]
+
+        def write(cache_leafs, kv):
+            k, v = kv                                         # [L,B,C,Kv,hd]
+            new = dict(cache_leafs)
+            new["k"] = cache_leafs["k"].at[:, row, :c].set(k[:, 0])
+            new["v"] = cache_leafs["v"].at[:, row, :c].set(v[:, 0])
+            new["pos"] = jnp.where(
+                jnp.arange(cache_leafs["pos"].shape[1])[None] == row,
+                length.astype(cache_leafs["pos"].dtype), cache_leafs["pos"])
+            return new
+
+        new_cache = dict(cache)
+        if cfg.first_k_dense:
+            def dbody(x, lp):
+                y, kv = block_prefill(lp, x, cfg, moe_layer=False)
+                return y, kv
+            x, kvs = jax.lax.scan(dbody, x, params["dense_layers"])
+            new_cache["dense_layers"] = write(cache["dense_layers"], kvs)
+
+        def body(x, lp):
+            y, kv = block_prefill(lp, x, cfg, moe_layer=self.moe)
+            return y, kv
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        new_cache["layers"] = write(cache["layers"], kvs)
+
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)
+        last = jax.lax.dynamic_index_in_dim(logits[0], length - 1, 0,
+                                            keepdims=False)
+        return last, new_cache
 
     def decode_step(self, params, cache, tokens, active=None):
         """tokens: [B,1] -> (logits [B,V], new cache). ``active`` [B] masks

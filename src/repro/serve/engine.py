@@ -1,127 +1,98 @@
 """Batched serving engine with continuous batching.
 
-Slot-based scheduler over one jitted decode step: a fixed decode batch of
-``max_batch`` rows; each row is a slot with its own cache position (the
-per-row ``pos`` in the model caches). Incoming requests stream their prompt
-tokens through the shared step (chunk-less prefill) while other slots keep
-decoding — the ``active`` row mask keeps inactive slots' caches frozen.
-Finished rows free their slot immediately. The decode-shape dry-run cells
-lower exactly this step function at production size.
+The engine is now a thin composition of two halves:
+
+* :class:`repro.serve.scheduler.Scheduler` — host-side continuous batching:
+  slot admission/eviction, prompt streaming (chunk-less prefill through the
+  shared decode step), per-slot generation budgets and the sequence budget.
+* a decode backend (:mod:`repro.serve.sharded_cache`) — parameter/cache
+  placement plus the jitted step. The default is the dense single-host
+  backend; pass ``RingShardedBackend(cfg, scfg, params, mesh, mode)`` to
+  serve from a KV cache ring-sharded along the 'model' mesh axis with the
+  paper's systolic link modes moving each row's query around the ring.
+
+Each engine tick plans a fixed ``max_batch``-row token batch (each row is a
+slot with its own cache position; the ``active`` mask keeps idle slots'
+caches frozen), runs one backend step, samples, and commits. The decode
+dry-run cells lower exactly this step function at production size.
 """
 from __future__ import annotations
-
-from dataclasses import dataclass, field
-from typing import Optional
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ServeConfig
-from repro.models import build_model
 from repro.serve.sample import sample
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                    # [P] token ids
-    max_new_tokens: int = 16
-    out_tokens: list = field(default_factory=list)
-    done: bool = False
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401 (re-export)
+from repro.serve.sharded_cache import DecodeBackend
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
+                 backend: DecodeBackend | None = None):
         self.cfg = cfg
         self.scfg = scfg
-        self.params = params
-        self.model = build_model(cfg)
-        self.max_batch = scfg.max_batch
-        self.max_seq = scfg.max_seq_len
-        self.cache = self.model.init_cache(self.max_batch, self.max_seq)
+        self.backend = backend if backend is not None \
+            else DecodeBackend(cfg, scfg, params)
+        self.sched = Scheduler(scfg.max_batch, scfg.max_seq_len,
+                               bos_token=scfg.bos_token)
         self.key = jax.random.PRNGKey(scfg.seed)
-        self._decode = jax.jit(self.model.decode_step)
-        self._next_rid = 0
-        self.pending: list[Request] = []
-        # slot bookkeeping (host side)
-        self.slot_req: list[Optional[Request]] = [None] * self.max_batch
-        self.slot_prompt_left: np.ndarray = np.zeros(self.max_batch, np.int64)
-        self.slot_new_left: np.ndarray = np.zeros(self.max_batch, np.int64)
-        self._zero_row = jax.jit(self._make_zero_row())
 
-    def _make_zero_row(self):
-        def zero_row(cache, row):
-            def z(leaf):
-                # per-row state: zero everything indexed by the batch dim.
-                # Caches are laid out [layers, batch, ...] or [batch, ...];
-                # leaves whose shape contains max_batch at dim 0 or 1.
-                if leaf.ndim >= 1 and leaf.shape[0] == self.max_batch:
-                    return leaf.at[row].set(jnp.zeros_like(leaf[row]))
-                if leaf.ndim >= 2 and leaf.shape[1] == self.max_batch:
-                    return leaf.at[:, row].set(jnp.zeros_like(leaf[:, row]))
-                return leaf
-            return jax.tree_util.tree_map(z, cache)
-        return zero_row
+    # ------------------------------------------------- compat conveniences
+    @property
+    def max_batch(self) -> int:
+        return self.scfg.max_batch
+
+    @property
+    def max_seq(self) -> int:
+        return self.scfg.max_seq_len
+
+    @property
+    def pending(self) -> list:
+        return self.sched.pending
+
+    @property
+    def params(self):
+        return self.backend.params
+
+    @property
+    def cache(self):
+        return self.backend.cache
+
+    @property
+    def model(self):
+        return self.backend.model
 
     # ------------------------------------------------------------- client
     def submit(self, prompt, max_new_tokens: int = 16) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        self.pending.append(Request(rid, np.asarray(prompt, np.int32),
-                                    max_new_tokens))
-        return rid
+        """Queue a request; returns its rid. Empty prompts are seeded with
+        ``scfg.bos_token``; ``max_new_tokens`` is clipped to the sequence
+        budget and over-long prompts raise ValueError (scheduler.submit)."""
+        return self.sched.submit(prompt, max_new_tokens).rid
 
     # ---------------------------------------------------------- scheduler
     def _admit(self):
-        for slot in range(self.max_batch):
-            if self.slot_req[slot] is not None or not self.pending:
-                continue
-            req = self.pending.pop(0)
-            self.slot_req[slot] = req
-            self.slot_prompt_left[slot] = len(req.prompt)
-            self.slot_new_left[slot] = req.max_new_tokens
-            self.cache = self._zero_row(self.cache, slot)
+        for slot, req in self.sched.admit():
+            self.backend.free_slot(slot)
+            n_block = self.backend.prefill_len(len(req.prompt))
+            if n_block > 0:
+                self.backend.prefill(slot, req.prompt[:n_block])
+                self.sched.note_prefilled(slot, n_block)
 
     def step(self):
-        """One engine tick = one jitted decode step for all slots."""
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        active = np.zeros(self.max_batch, bool)
-        sampling = np.zeros(self.max_batch, bool)
-        for slot, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            active[slot] = True
-            if self.slot_prompt_left[slot] > 0:
-                # stream the next prompt token (prefill-in-decode)
-                idx = len(req.prompt) - self.slot_prompt_left[slot]
-                tokens[slot, 0] = req.prompt[idx]
-                self.slot_prompt_left[slot] -= 1
-                sampling[slot] = self.slot_prompt_left[slot] == 0
-            else:
-                tokens[slot, 0] = req.out_tokens[-1]
-                sampling[slot] = True
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(active))
+        """One engine tick = one backend decode step for all slots."""
+        tokens, active, sampling = self.sched.plan()
+        logits = self.backend.step(tokens, active)
         self.key, sub = jax.random.split(self.key)
         next_tok = np.asarray(sample(logits, sub, self.scfg.temperature,
                                      self.scfg.top_k))
-        for slot, req in enumerate(self.slot_req):
-            if req is None or not sampling[slot]:
-                continue
-            req.out_tokens.append(int(next_tok[slot]))
-            self.slot_new_left[slot] -= 1
-            if self.slot_new_left[slot] <= 0:
-                req.done = True
-                self.slot_req[slot] = None
+        self.sched.commit(sampling, next_tok)
 
     def run(self, max_ticks: int = 10_000) -> int:
         """Drive until all submitted requests complete. Returns #ticks."""
         ticks = 0
-        while (self.pending or any(r is not None for r in self.slot_req)) \
-                and ticks < max_ticks:
+        while self.sched.busy and ticks < max_ticks:
             self._admit()
             self.step()
             ticks += 1

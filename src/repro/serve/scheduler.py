@@ -1,0 +1,133 @@
+"""Host-side continuous-batching scheduler — the pure-Python half of the
+serving engine.
+
+The scheduler owns everything that is *not* device math: request queueing,
+slot admission and eviction, prompt streaming (chunk-less prefill through
+the shared decode step), per-slot generation budgets, and the sequence
+budget. It never imports jax: each tick it plans a fixed-shape
+``(tokens, active, sampling)`` batch for whatever backend executes the
+step, and afterwards commits the sampled tokens. The same scheduler drives
+the dense single-host backend and the ring-sharded backend
+interchangeably (serve/sharded_cache.py).
+
+Budgets: a request reserves ``prompt_len + max_new_tokens`` cache slots
+(the engine writes prompt and all-but-the-last sampled token, so this
+over-reserves by one — the safe side). ``submit`` truncates
+``max_new_tokens`` to whatever fits in ``max_seq_len`` and rejects prompts
+that leave no room to generate, so a slot's cache position can never run
+past the cache and silently corrupt attention. Empty prompts are admitted
+directly into sampling by seeding them with ``bos_token``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # [P] token ids
+    max_new_tokens: int = 16
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+    truncated: bool = False               # max_new clipped by the seq budget
+
+
+class Scheduler:
+    """Slot bookkeeping for a fixed decode batch of ``max_batch`` rows."""
+
+    def __init__(self, max_batch: int, max_seq_len: int, bos_token: int = 0):
+        self.max_batch = max_batch
+        self.max_seq = max_seq_len
+        self.bos_token = bos_token
+        self._next_rid = 0
+        self.pending: list[Request] = []
+        self.slot_req: list[Optional[Request]] = [None] * max_batch
+        self.slot_prompt_left = np.zeros(max_batch, np.int64)
+        self.slot_new_left = np.zeros(max_batch, np.int64)
+
+    # ------------------------------------------------------------- client
+    def submit(self, prompt, max_new_tokens: int = 16) -> Request:
+        """Queue a request. Enforces the sequence budget: the prompt plus
+        the generation budget must fit ``max_seq_len`` — ``max_new_tokens``
+        is truncated to the room left, and a prompt with no room at all
+        (``len(prompt) >= max_seq_len``) is rejected."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            # empty prompt: seed with BOS so the first tick samples
+            prompt = np.array([self.bos_token], np.int32)
+        if len(prompt) >= self.max_seq:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens leaves no room to generate "
+                f"within max_seq_len={self.max_seq}")
+        budget = self.max_seq - len(prompt)
+        truncated = max_new_tokens > budget
+        req = Request(self._next_rid, prompt,
+                      min(max_new_tokens, budget), truncated=truncated)
+        self._next_rid += 1
+        self.pending.append(req)
+        return req
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.pending) or any(
+            r is not None for r in self.slot_req)
+
+    # ---------------------------------------------------------- scheduler
+    def admit(self) -> list[tuple[int, Request]]:
+        """Fill free slots from the pending queue; returns the newly
+        admitted (slot, request) pairs so the backend can recycle (zero)
+        each freed slot's cache before its first step."""
+        admitted = []
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            self.slot_req[slot] = req
+            self.slot_prompt_left[slot] = len(req.prompt)
+            self.slot_new_left[slot] = req.max_new_tokens
+            admitted.append((slot, req))
+        return admitted
+
+    def note_prefilled(self, slot: int, n_tokens: int) -> None:
+        """Record that the backend block-prefilled the first ``n_tokens``
+        prompt tokens of ``slot`` (the rest still stream per tick)."""
+        assert 0 < n_tokens < self.slot_prompt_left[slot]
+        self.slot_prompt_left[slot] -= n_tokens
+
+    def plan(self):
+        """Plan one tick: (tokens [B,1] int32, active [B], sampling [B]).
+
+        Slots still consuming their prompt feed the next prompt token;
+        slots whose prompt is exhausted feed their last sampled token and
+        sample again from the step's logits."""
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        active = np.zeros(self.max_batch, bool)
+        sampling = np.zeros(self.max_batch, bool)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            active[slot] = True
+            if self.slot_prompt_left[slot] > 0:
+                idx = len(req.prompt) - self.slot_prompt_left[slot]
+                tokens[slot, 0] = req.prompt[idx]
+                self.slot_prompt_left[slot] -= 1
+                sampling[slot] = self.slot_prompt_left[slot] == 0
+            else:
+                tokens[slot, 0] = req.out_tokens[-1]
+                sampling[slot] = True
+        return tokens, active, sampling
+
+    def commit(self, sampling: np.ndarray, next_tok: np.ndarray) -> None:
+        """Append this tick's sampled tokens; retire exhausted slots."""
+        for slot, req in enumerate(self.slot_req):
+            if req is None or not sampling[slot]:
+                continue
+            req.out_tokens.append(int(next_tok[slot]))
+            self.slot_new_left[slot] -= 1
+            if self.slot_new_left[slot] <= 0:
+                req.done = True
+                self.slot_req[slot] = None

@@ -1,0 +1,174 @@
+"""Decode backends: device-side halves of the serving engine.
+
+A backend owns parameter placement, the decode cache, and the jitted step
+functions; the host-side scheduler (serve/scheduler.py) is backend-agnostic
+and drives whichever backend the engine was built with:
+
+* :class:`DecodeBackend` — dense single-host: the cache lives wherever jit
+  puts it, every step is one jitted ``model.decode_step``.
+* :class:`RingShardedBackend` — the hybrid systolic layout: the KV cache's
+  slot dimension is sharded along the 'model' ring
+  (``sharding/partitioning.RING_SERVE_RULES``), the decode batch over
+  (data x model), and the step runs under that sharding context with
+  ``cfg.systolic_mode`` set to a link mode, so ``models/attention.
+  gqa_decode`` streams each row's query around the resident cache shards
+  (``core/ring_attention.systolic_ring_decode``) and block prefill streams
+  K/V blocks through the existing ``ring_attention`` schedule.
+
+Both backends expose the same surface — ``step``, ``free_slot``,
+``prefill_len``/``prefill`` — so the scheduler cannot tell them apart; the
+multidev parity check holds them to token-identical greedy outputs.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import build_model
+from repro.models.common import use_sharding
+from repro.sharding.partitioning import (
+    RING_SERVE_RULES,
+    serve_cache_shardings,
+    shardings_from_axes,
+)
+
+
+class DecodeBackend:
+    """Dense single-host backend: one jitted decode step over the slot
+    batch, per-slot cache rows zeroed on reuse."""
+
+    name = "dense"
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.model = build_model(cfg)
+        self.max_batch = scfg.max_batch
+        self.max_seq = scfg.max_seq_len
+        self.params = self._place_params(params)
+        self.cache = self._init_cache()
+        self._step = jax.jit(self._make_step())
+        self._zero = jax.jit(self._make_zero_row())
+        self._prefill = jax.jit(self._make_prefill()) \
+            if self.supports_prefill else None
+
+    # ---------------------------------------------------------- placement
+    def _place_params(self, params):
+        return params
+
+    def _init_cache(self):
+        return self.model.init_cache(self.max_batch, self.max_seq)
+
+    # -------------------------------------------------------------- steps
+    def _make_step(self):
+        return self.model.decode_step
+
+    def _make_prefill(self):
+        return self.model.prefill_into_cache
+
+    def _make_zero_row(self):
+        # locate the batch dim from the model's logical cache axes rather
+        # than guessing by size: a [layers, batch, ...] leaf with
+        # n_layers == max_batch would otherwise zero a layer slice of every
+        # row (and leak the old occupant's KV into the new request).
+        axes = self.model.cache_axes()
+
+        def zero_row(cache, row):
+            def z(leaf, ax):
+                if not ax or "cache_batch" not in ax:
+                    return leaf
+                idx = (slice(None),) * ax.index("cache_batch") + (row,)
+                return leaf.at[idx].set(jnp.zeros_like(leaf[idx]))
+            return jax.tree_util.tree_map(z, cache, axes)
+        return zero_row
+
+    # ---------------------------------------------------------- interface
+    def step(self, tokens: np.ndarray, active: np.ndarray):
+        """One decode tick for the whole slot batch -> logits [B, V]."""
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active))
+        return logits
+
+    def free_slot(self, slot: int) -> None:
+        """Zero a freed slot's cache rows so the next occupant decodes
+        bit-identically to a fresh engine."""
+        self.cache = self._zero(self.cache, slot)
+
+    @property
+    def supports_prefill(self) -> bool:
+        return (self.scfg.prefill_chunk > 0
+                and hasattr(self.model, "prefill_into_cache")
+                and self.cfg.attention_type == "gqa"
+                and not self.cfg.sliding_window)
+
+    def prefill_len(self, prompt_len: int) -> int:
+        """How many leading prompt tokens to block-prefill for a prompt of
+        this length (the rest stream through the decode step; at least the
+        final prompt token always streams, so sampling stays uniform)."""
+        if not self.supports_prefill:
+            return 0
+        chunk = min(self.scfg.prefill_chunk, self.max_seq)
+        return max(min(prompt_len - 1, chunk), 0)
+
+    def prefill(self, slot: int, prompt: np.ndarray) -> None:
+        """Block-prefill ``prompt`` (already clipped to ``prefill_len``)
+        into ``slot``: one full-sequence forward writes its K/V into the
+        slot's cache rows and advances the row position."""
+        chunk = min(self.scfg.prefill_chunk, self.max_seq)
+        buf = np.zeros(chunk, np.int32)
+        buf[:len(prompt)] = prompt
+        _, self.cache = self._prefill(
+            self.params, self.cache, jnp.asarray(buf),
+            jnp.int32(slot), jnp.int32(len(prompt)))
+
+
+class RingShardedBackend(DecodeBackend):
+    """Ring-sharded backend: resident cache shards on the 'model' ring,
+    decode queries streamed over the links in ``mode``."""
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
+                 mesh: Mesh, mode: str = "qlr", param_axes=None):
+        self.mesh = mesh
+        self.mode = mode
+        self.param_axes = param_axes
+        self.name = f"ring-{mode}"
+        cfg = replace(cfg, systolic_mode=mode)
+        super().__init__(cfg, scfg, params)
+
+    def _place_params(self, params):
+        if self.param_axes is not None:
+            sh = shardings_from_axes(params, self.param_axes, self.mesh,
+                                     RING_SERVE_RULES)
+        else:
+            sh = jax.tree_util.tree_map(
+                lambda _: NamedSharding(self.mesh, P()), params)
+        return jax.device_put(params, sh)
+
+    def _init_cache(self):
+        cache = self.model.init_cache(self.max_batch, self.max_seq)
+        sh = serve_cache_shardings(self.model, self.max_batch, self.max_seq,
+                                   self.mesh, ring=True)
+        return jax.device_put(cache, sh)
+
+    def _make_step(self):
+        model, mesh = self.model, self.mesh
+
+        def step(params, cache, tokens, active):
+            with use_sharding(mesh, rules=RING_SERVE_RULES):
+                return model.decode_step(params, cache, tokens, active)
+        return step
+
+    def _make_prefill(self):
+        model, mesh = self.model, self.mesh
+
+        def prefill(params, cache, tokens, row, length):
+            with use_sharding(mesh, rules=RING_SERVE_RULES):
+                return model.prefill_into_cache(params, cache, tokens, row,
+                                                length)
+        return prefill

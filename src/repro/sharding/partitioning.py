@@ -1,5 +1,11 @@
 """Partitioning: logical axes -> NamedSharding trees for params, optimizer
 state, caches and batches, with divisibility fallbacks (common.resolve_spec).
+
+Also declares the serving layouts: ``RING_SERVE_RULES`` is the ring-sharded
+decode-cache layout (cache slots resident along the 'model' ring, decode
+batch over the data axes) that `core/ring_attention.systolic_ring_decode`
+streams queries against; ``serve_cache_shardings`` materializes it for a
+model's cache tree.
 """
 from __future__ import annotations
 
@@ -10,6 +16,31 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import DEFAULT_RULES, ShardCtx, resolve_spec
+
+# Ring-sharded serving layout: the KV cache's slot dimension lives on the
+# 'model' ring (each device's resident shard — the weight-stationary operand
+# of the decode schedule), rows ride the data axes, and decode activations
+# follow the rows. Overrides the training default (cache_seq over 'data',
+# context parallelism) for serve-time use.
+RING_SERVE_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    "cache_seq": (("model",),),
+    "cache_batch": (("pod", "data"), ("data",)),
+    "batch": (("pod", "data"), ("data",)),
+    # decode activations are [B,1,D]: no sequence axis to shard
+    "seq": ((),),
+    "seq_sp": ((),),
+}
+
+
+def serve_cache_shardings(model, batch: int, seq_len: int, mesh: Mesh,
+                          ring: bool = True):
+    """NamedShardings for ``model.init_cache(batch, seq_len)`` under the
+    serving layout: ring-sharded (slots over 'model') when ``ring`` else
+    the default training rules."""
+    from functools import partial
+    cache_sds = jax.eval_shape(partial(model.init_cache, batch, seq_len))
+    rules = RING_SERVE_RULES if ring else None
+    return shardings_from_axes(cache_sds, model.cache_axes(), mesh, rules)
 
 
 def specs_from_axes(sds_tree, axes_tree, mesh: Mesh, rules: dict | None = None):

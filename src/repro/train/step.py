@@ -139,12 +139,15 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh) -> Callable:
 
 
 def make_serve_step(cfg: ModelConfig, mesh: Mesh) -> Callable:
-    """One decode token against a seq_len-sized cache (the decode_* cells)."""
+    """One decode token against a seq_len-sized cache (the decode_* cells).
+    Takes the continuous-batching ``active`` row mask, matching the step
+    the serving engine actually drives (serve/engine.py)."""
     model = build_model(cfg)
 
-    def serve_step(params, cache, tokens):
+    def serve_step(params, cache, tokens, active):
         with use_sharding(mesh, rules=rules_for(cfg)):
-            logits, new_cache = model.decode_step(params, cache, tokens)
+            logits, new_cache = model.decode_step(params, cache, tokens,
+                                                  active)
             return logits, new_cache
 
     return serve_step

@@ -96,3 +96,15 @@ def test_systolic_model_parity_multidev():
     results = run_check("check_systolic_model.py")
     for mode in ("sw", "xqueue", "qlr"):
         assert results[f"systolic_model_{mode}"]["ok"]
+
+
+def test_ring_decode_multidev():
+    """Ring-sharded KV decode: the decode core matches dense masked
+    attention numerically, and a ring-sharded ServeEngine produces the
+    dense engine's greedy tokens position-for-position (mid-run admissions
+    included) in every link mode — mismatches only at certified fp ties."""
+    results = run_check("check_ring_decode.py")
+    for mode in ("baseline", "sw", "xqueue", "qlr"):
+        assert results[f"decode_core_{mode}"]["ok"]
+        assert results[f"engine_parity_{mode}"]["ok"]
+    assert results["decode_core_edge_pos"]["ok"]

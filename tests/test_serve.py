@@ -65,3 +65,118 @@ def test_sampler_greedy_and_topk():
     assert toks.tolist() == [1, 0]
     toks = sample(logits, jax.random.PRNGKey(0), temperature=1.0, top_k=1)
     assert toks.tolist() == [1, 0]  # top-1 == greedy regardless of temp
+
+
+# ---------------------------------------------------------------------------
+# Churn: staggered submits, slot reuse, budgets
+# ---------------------------------------------------------------------------
+
+
+def test_staggered_mid_run_submits(qwen):
+    """Requests submitted while the engine is mid-run decode exactly like
+    requests submitted up front (continuous batching admits into whatever
+    slot frees up; the active mask keeps other rows' caches frozen)."""
+    cfg, model, params = qwen
+    eng = ServeEngine(cfg, ServeConfig(max_batch=2, max_seq_len=64), params)
+    first = [np.array([5, 9, 13]), np.array([7, 2])]
+    for p in first:
+        eng.submit(p, max_new_tokens=5)
+    reqs = list(eng.pending)
+    # run a few ticks, then drip new requests in while slots are busy
+    for _ in range(3):
+        eng._admit()
+        eng.step()
+    late = [np.array([1, 2, 3, 4]), np.array([11]), np.array([3, 3])]
+    for i, p in enumerate(late):
+        eng.submit(p, max_new_tokens=4)
+        eng._admit()
+        eng.step()
+    reqs += list(eng.pending) + [r for s in eng.sched.slot_req
+                                 if s is not None and s not in reqs]
+    eng.run()
+    prompts = first + late
+    budgets = [5, 5, 4, 4, 4]
+    by_rid = sorted({id(r): r for r in reqs}.values(), key=lambda r: r.rid)
+    assert len(by_rid) == 5 and all(r.done for r in by_rid)
+    for p, n, req in zip(prompts, budgets, by_rid):
+        assert req.out_tokens == sequential_greedy(model, params, list(p), n)
+
+
+def test_slot_reuse_is_bit_identical_to_fresh(qwen):
+    """A freed slot's cache must be zeroed so its next occupant decodes
+    bit-identically to a fresh engine (no KV bleed-through)."""
+    cfg, model, params = qwen
+    scfg = ServeConfig(max_batch=1, max_seq_len=64)
+    eng = ServeEngine(cfg, scfg, params)
+    eng.submit(np.array([9, 8, 7, 6]), max_new_tokens=6)   # dirties slot 0
+    eng.submit(np.array([4, 2]), max_new_tokens=4)         # reuses slot 0
+    reqs = list(eng.pending)
+    eng.run()
+
+    fresh = ServeEngine(cfg, scfg, params)
+    fresh.submit(np.array([4, 2]), max_new_tokens=4)
+    ref = fresh.pending[0]
+    fresh.run()
+    assert reqs[1].out_tokens == ref.out_tokens
+
+    # and the zeroing itself is bitwise: with max_batch=1 every request
+    # used slot 0, so freeing it must restore the exact fresh cache
+    eng.backend.free_slot(0)
+    a = jax.tree_util.tree_leaves(eng.backend.cache)
+    b = jax.tree_util.tree_leaves(fresh.backend._init_cache())
+    assert len(a) == len(b)
+    for la, lb in zip(a, b):
+        assert la.shape == lb.shape
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_empty_prompt_seeds_bos(qwen):
+    """An empty prompt used to crash step() (IndexError on out_tokens[-1]);
+    it must now be seeded with the BOS token and decode like prompt=[bos]."""
+    cfg, model, params = qwen
+    eng = ServeEngine(cfg, ServeConfig(max_batch=2, max_seq_len=64,
+                                       bos_token=3), params)
+    eng.submit(np.array([], np.int32), max_new_tokens=4)
+    req = eng.pending[0]
+    eng.run()
+    assert req.done
+    assert req.out_tokens == sequential_greedy(model, params, [3], 4)
+
+
+def test_sequence_budget_truncates_and_rejects(qwen):
+    cfg, model, params = qwen
+    eng = ServeEngine(cfg, ServeConfig(max_batch=2, max_seq_len=16), params)
+    # prompt 10 + max_new 20 > 16: truncated to 6 new tokens
+    eng.submit(np.arange(1, 11, dtype=np.int32), max_new_tokens=20)
+    req = eng.pending[0]
+    assert req.truncated and req.max_new_tokens == 6
+    eng.run()
+    assert req.done and len(req.out_tokens) == 6
+    # a prompt that fills the whole budget leaves no room to generate
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(16, dtype=np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(99, dtype=np.int32), max_new_tokens=1)
+
+
+def test_dense_block_prefill_matches_streaming(qwen):
+    """prefill_chunk > 0 block-prefills each prompt's head through one
+    full-sequence forward; greedy outputs must match chunk-less streaming
+    and the tick count must drop."""
+    cfg, model, params = qwen
+    prompts = [np.array([5, 9, 13, 2, 8, 1, 7]), np.array([7, 2]),
+               np.array([1, 2, 3, 4, 5, 6, 7, 8, 9]), np.array([11])]
+
+    def run(scfg):
+        eng = ServeEngine(cfg, scfg, params)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=4)
+        reqs = list(eng.pending)
+        ticks = eng.run()
+        return [r.out_tokens for r in reqs], ticks
+
+    ref, t_stream = run(ServeConfig(max_batch=4, max_seq_len=64))
+    out, t_block = run(ServeConfig(max_batch=4, max_seq_len=64,
+                                   prefill_chunk=8))
+    assert out == ref
+    assert t_block < t_stream

@@ -289,6 +289,7 @@ class ServeConfig:
     top_k: int = 0
     seed: int = 0
     bos_token: int = 0        # seed token for empty prompts
+    eos_token: int = -1       # slot retires when it samples this (< 0 = off)
     prefill_chunk: int = 0    # block-prefill up to this many prompt tokens
                               # at admission (0 = stream everything)
 

@@ -129,7 +129,7 @@ def ring_matmul_rs(x, w, topo: Topology, mode: str = "qlr"):
 
     acc = part(0, x)
     for t in range(1, n):
-        moved = queues.hop(topo, acc, mode)
+        moved = queues.hop(topo, acc, mode, t=t - 1)
         if mode in ("sw", "xqueue"):
             # serialize: the next partial waits for the queue transfer
             x_tied, moved = optimization_barrier((x, moved))
@@ -166,8 +166,8 @@ def cannon_matmul(a_local, b_local, row_topo: Topology, col_topo: Topology,
             if mode in ("sw", "xqueue"):
                 acc, a_local, b_local = optimization_barrier(
                     (acc, a_local, b_local))
-            a_local = queues.hop(row_topo, a_local, mode)
-            b_local = queues.hop(col_topo, b_local, mode)
+            a_local = queues.hop(row_topo, a_local, mode, t=t)
+            b_local = queues.hop(col_topo, b_local, mode, t=t)
     return acc
 
 

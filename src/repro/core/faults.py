@@ -1,0 +1,191 @@
+"""Deterministic fault injection for the systolic queue links.
+
+The queues are the flexibility *and* the failure surface of the paper's
+shared-memory systolic model: a single stale, misrouted, or corrupted pop
+silently poisons every downstream PE. This module makes those failures a
+first-class, reproducible input so every ring schedule (attention, MoE,
+decode, collective matmul) can be exercised under faults inside
+``shard_map``.
+
+Fault classes (one per way a memory-mapped FIFO goes wrong):
+
+  corrupt — the popped payload is garbage: float leaves become NaN, int
+            leaves get a seeded bit-flip (a data-queue word clobbered).
+  drop    — the popped payload is zeros (the link dropped the message and
+            the pop returned an empty buffer).
+  stale   — the link is *stuck* from hop ``t`` on: every later pop returns
+            the element the PE already holds (a FIFO whose head never
+            advances). Persistent.
+  slow    — a one-hop hiccup: at hop ``t`` the pop returns the previous
+            element, then the link recovers. Transient. (Wall-clock
+            slowness is the serve layer's deadline monitor's job —
+            serve/health.py — since pure-functional traces have no clock.)
+
+Injection is seeded and targeted: a :class:`FaultSpec` names the fault
+kind, the hop index ``t`` and the topology axis index of the receiving PE.
+
+Two-layer mechanism, because the queue hops live deep inside jitted code:
+
+* **Host registry** — ``with faults.inject(spec):`` arms a process-global
+  spec. Engine/backend code reads it back with :func:`injected_vec` and
+  passes it *as an array argument* into its jitted step.
+* **Trace scope** — inside the traced function, ``with faults.scope(vec):``
+  publishes the (traced) encoded spec; ``queues.hop`` applies it. Because
+  the spec enters as a function input, one compiled step serves both the
+  clean and every faulted execution — arming a fault never retraces.
+
+``queues.stream``/``stream_carry`` open a scope automatically from the
+host registry when one is armed at trace time, so single-trace tests can
+simply write ``with faults.inject(spec): queues.stream(...)``.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("none", "corrupt", "drop", "stale", "slow")
+_KIND_ID = {k: i for i, k in enumerate(KINDS)}
+
+# encoded spec layout: int32[4] = (kind_id, hop, device, seed)
+_VEC_LEN = 4
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic queue-link fault.
+
+    kind:   one of :data:`KINDS` (not "none").
+    hop:    hop index ``t`` within a stream at which the fault fires
+            (for "stale", the first of the stuck hops).
+    device: topology axis index of the PE whose *pop* is faulted.
+    seed:   drives the bit-flip pattern for int-leaf corruption.
+    """
+    kind: str
+    hop: int = 0
+    device: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in KINDS or self.kind == "none":
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+    def encode(self) -> jnp.ndarray:
+        return jnp.asarray(
+            [_KIND_ID[self.kind], self.hop, self.device, self.seed],
+            jnp.int32)
+
+
+def no_fault_vec() -> jnp.ndarray:
+    """The disarmed spec: flows through the same compiled code as a no-op."""
+    return jnp.zeros((_VEC_LEN,), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# host registry (process-global, read at call time by engines/backends)
+# ---------------------------------------------------------------------------
+
+_INJECTED: list[FaultSpec] = []
+
+
+@contextmanager
+def inject(spec: FaultSpec):
+    """Arm ``spec`` for the dynamic extent of the block (host side)."""
+    _INJECTED.append(spec)
+    try:
+        yield spec
+    finally:
+        _INJECTED.pop()
+
+
+def injected() -> FaultSpec | None:
+    return _INJECTED[-1] if _INJECTED else None
+
+
+def injected_vec() -> jnp.ndarray:
+    """Encoded armed spec, or the disarmed vector — always int32[4], so it
+    can be an argument of a jitted step without retracing on (dis)arm."""
+    spec = injected()
+    return spec.encode() if spec is not None else no_fault_vec()
+
+
+# ---------------------------------------------------------------------------
+# trace scope (publishes the traced spec to queue hops during tracing)
+# ---------------------------------------------------------------------------
+
+_SCOPE: list = []
+
+
+@contextmanager
+def scope(vec):
+    """Publish an encoded spec (typically a traced function input) to the
+    queue primitives for the extent of the block."""
+    _SCOPE.append(vec)
+    try:
+        yield
+    finally:
+        _SCOPE.pop()
+
+
+def active_vec():
+    """The spec visible to queue hops at this point of the trace.
+
+    Inside an explicit :func:`scope` that wins; otherwise a host-armed
+    :func:`inject` spec is used (single-trace convenience). None = no
+    fault machinery is compiled in at all."""
+    if _SCOPE:
+        return _SCOPE[-1]
+    spec = injected()
+    return spec.encode() if spec is not None else None
+
+
+# ---------------------------------------------------------------------------
+# application (called by queues.hop with traced values)
+# ---------------------------------------------------------------------------
+
+
+def _poison_leaf(leaf, seed):
+    """Deterministic garbage of the leaf's dtype: NaN for floats, a seeded
+    bit-flip for ints/bools."""
+    if jnp.issubdtype(leaf.dtype, jnp.floating):
+        return jnp.full_like(leaf, jnp.nan)
+    if leaf.dtype == jnp.bool_:
+        return jnp.logical_not(leaf)
+    flip = (jnp.asarray(0x5A5A5A5A, jnp.int32) ^ seed).astype(leaf.dtype)
+    return leaf ^ flip
+
+
+def apply(vec, moved, prev, t, my, data_only: bool = False,
+          stall_only: bool = False):
+    """Apply the encoded fault to one hop's result.
+
+    moved: the post-hop pytree (what a clean pop returns).
+    prev:  the receiving PE's pre-hop element (what a stuck/late pop
+           returns instead).
+    t, my: hop index and the PE's topology axis index (traced).
+
+    data_only:  apply only payload faults (corrupt/drop) — used by checked
+                links, where the tag/checksum sidecar models a separate
+                narrow control FIFO that data-word faults cannot touch.
+    stall_only: apply only whole-message faults (stale/slow) — a stuck
+                link freezes payload *and* sidecar together.
+    """
+    kind, hop_t, dev, seed = vec[0], vec[1], vec[2], vec[3]
+    here = (t == hop_t) & (my == dev)
+    stuck = (kind == _KIND_ID["stale"]) & (t >= hop_t) & (my == dev)
+    hiccup = (kind == _KIND_ID["slow"]) & here
+
+    def per_leaf(m, p):
+        out = m
+        if not stall_only:
+            corrupt = here & (kind == _KIND_ID["corrupt"])
+            dropped = here & (kind == _KIND_ID["drop"])
+            out = jnp.where(corrupt, _poison_leaf(out, seed), out)
+            out = jnp.where(dropped, jnp.zeros_like(out), out)
+        if not data_only:
+            out = jnp.where(stuck | hiccup, p, out)
+        return out
+
+    return jax.tree_util.tree_map(per_leaf, moved, prev)

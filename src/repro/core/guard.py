@@ -1,0 +1,56 @@
+"""Numeric guardrails: finite (NaN/Inf) checks on ring outputs and logits.
+
+Checked links (core/queues.py) catch faults *on* the links; this module
+catches what comes out the other end — a corrupted payload that already
+folded into an online-softmax state, a logit row that blew up, a ring
+output with an Inf from a dropped rescale. The device-side helpers are
+cheap reductions safe to fuse into jitted steps; the host-side check
+raises with the offending leaf paths so serving logs say *which* operand
+went bad, not just that something did.
+
+The serving health monitor (serve/health.py) uses :func:`row_finite` to
+isolate the poisoned request rows of a decode batch instead of discarding
+the whole step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class NonFiniteError(RuntimeError):
+    """A guarded value contained NaN/Inf."""
+
+
+def all_finite(tree) -> jnp.ndarray:
+    """Device-side: scalar bool, True iff every float leaf is finite.
+    Integer leaves are ignored (always finite)."""
+    ok = jnp.asarray(True)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(leaf)))
+    return ok
+
+
+def row_finite(logits) -> np.ndarray:
+    """Host-side: [B] bool — which rows of a [B, V] logit batch are fully
+    finite. The serve monitor evicts the rows that are not."""
+    return np.isfinite(np.asarray(logits, np.float32)).all(axis=-1)
+
+
+def check_finite(tree, name: str = "value") -> None:
+    """Host-side: raise :class:`NonFiniteError` naming every non-finite
+    leaf (by pytree path) of ``tree``; no-op when all leaves are finite."""
+    bad = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if not np.issubdtype(arr.dtype, np.floating):
+            continue
+        n_bad = int((~np.isfinite(arr)).sum())
+        if n_bad:
+            bad.append(f"{jax.tree_util.keystr(path)}: {n_bad}/{arr.size} "
+                       f"non-finite")
+    if bad:
+        raise NonFiniteError(f"{name} contains non-finite values — "
+                             + "; ".join(bad))

@@ -30,8 +30,8 @@ def exchange_halo(x_local, axis: str, n: int, halo: int, mode: str = "qlr"):
     Halo rows come from ring neighbors; true image edges get zeros."""
     fwd_topo = ring(axis, n, step=1)        # my bottom rows -> next PE's top
     bwd_topo = ring(axis, n, step=-1)       # my top rows -> prev PE's bottom
-    top_in = queues.hop(fwd_topo, x_local[-halo:], mode)
-    bot_in = queues.hop(bwd_topo, x_local[:halo], mode)
+    top_in = queues.hop(fwd_topo, x_local[-halo:], mode, t=0)
+    bot_in = queues.hop(bwd_topo, x_local[:halo], mode, t=0)
     idx = jax.lax.axis_index(axis)
     top_in = jnp.where(idx == 0, jnp.zeros_like(top_in), top_in)
     bot_in = jnp.where(idx == n - 1, jnp.zeros_like(bot_in), bot_in)

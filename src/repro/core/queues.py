@@ -20,6 +20,23 @@ access of **Xqueue** (`q.push`/`q.pop`). The three modes:
 ``stream()`` is the generic driver every systolic kernel builds on: it
 carries an operand buffer around the topology, invoking ``consume`` once
 per hop — compute and communication relate exactly as the mode dictates.
+
+Robustness layer (DESIGN.md §7): queues are also the failure surface — a
+stale, misrouted, or corrupted pop silently poisons every downstream PE.
+Two opt-in facilities address that:
+
+* **fault injection** — when a :mod:`repro.core.faults` scope is active,
+  every ``hop`` that knows its hop index ``t`` applies the armed
+  :class:`~repro.core.faults.FaultSpec` (corrupt / drop / stale / slow) at
+  the targeted (hop, PE), so any ring schedule can be chaos-tested.
+* **checked links** (``checked=True`` on ``hop``/``stream``/
+  ``stream_carry``) — each message rides a sidecar of (sender id, hop
+  sequence number, payload checksum): the narrow control FIFO next to the
+  wide data FIFOs of the paper's several-queues-per-PE layout. The
+  receiver verifies all three and surfaces per-hop health flags
+  ``[tag_error, checksum_error]``. Stuck/late links (stale, slow) freeze
+  the whole message and trip the *tag* check; data-word faults (corrupt,
+  drop) touch only the payload FIFOs and trip the *checksum* check.
 """
 from __future__ import annotations
 
@@ -30,18 +47,37 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import optimization_barrier
+from repro.core import faults
 from repro.core.topology import Topology
 
 MODES = ("sw", "xqueue", "qlr")
 
 
-def hop(topo: Topology, x, mode: str = "qlr"):
+def hop(topo: Topology, x, mode: str = "qlr", *, t=None, prev=None,
+        checked: bool = False):
     """One systolic hop: push x to the linked neighbor, pop its operand.
 
     ``x`` may be a pytree: each leaf rides its own queue (the paper's
     several-queues-per-PE layout — one FIFO per operand class), all hopping
     the same topology in lockstep.
+
+    ``t`` is the hop's sequence number within its schedule; passing it
+    enables fault injection at this hop (and is required for ``checked``).
+    ``prev`` is what a stuck pop would return instead — defaults to ``x``,
+    the receiving PE's own pre-hop element. With ``checked=True`` returns
+    ``(popped, health)`` where health is int32[2] = (tag_err, csum_err).
     """
+    if checked:
+        return _checked_hop(topo, x, mode, t=t, prev=prev)
+    moved = _raw_hop(topo, x, mode)
+    vec = faults.active_vec()
+    if vec is not None and t is not None:
+        my = jax.lax.axis_index(topo.axis)
+        moved = faults.apply(vec, moved, x if prev is None else prev, t, my)
+    return moved
+
+
+def _raw_hop(topo: Topology, x, mode: str):
     if mode == "sw":
         return jax.tree_util.tree_map(partial(_sw_hop, topo), x)
     return jax.lax.ppermute(x, topo.axis, topo.perm)
@@ -71,38 +107,117 @@ def _sw_hop(topo: Topology, x):
     return out
 
 
+# ---------------------------------------------------------------------------
+# checked links: sequence tag + payload checksum sidecar
+# ---------------------------------------------------------------------------
+
+
+def checksum(tree) -> jnp.ndarray:
+    """Order-independent int32 digest of a pytree's payload bits.
+
+    Floats are bitcast (via an exact float32 widening) and summed with
+    int32 wraparound — integer addition is associative, so the receiver's
+    recomputation matches the sender's bit-for-bit regardless of how XLA
+    schedules either reduction. NaN corruption, dropped (zeroed) payloads
+    and bit flips all change the digest; an all-zero payload is the one
+    blind spot (its digest is 0 like the dropped message's — the sequence
+    tag still covers stuck links there)."""
+    tot = jnp.zeros((), jnp.int32)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            bits = jax.lax.bitcast_convert_type(
+                leaf.astype(jnp.float32), jnp.int32)
+        else:
+            bits = leaf.astype(jnp.int32)
+        tot = tot + jnp.sum(bits, dtype=jnp.int32)
+    return tot
+
+
+def _pred_table(topo: Topology) -> jnp.ndarray:
+    """pred_table[d] = the PE whose pushes device d pops (its topology
+    predecessor). Heads of open chains keep 0 — checked links assume every
+    PE has exactly one incoming link (rings, tori, snakes)."""
+    import numpy as np
+    preds = np.zeros(topo.size, np.int32)
+    for s, d in topo.perm:
+        preds[d] = s
+    return jnp.asarray(preds)
+
+
+def _checked_hop(topo: Topology, x, mode: str, *, t, prev=None):
+    """One hop with the (src, seq, checksum) sidecar riding alongside.
+
+    Returns (popped_payload, health) with health int32[2]:
+      health[0] — tag error: the message was stamped by the wrong sender
+                  (stale: the PE's own id) or with the wrong sequence
+                  number (slow: the previous hop's) — a stuck/late link.
+      health[1] — checksum error: the payload bits do not match the
+                  digest stamped at push time — corruption or a drop in
+                  the data FIFOs while the control FIFO survived.
+    """
+    assert t is not None, "checked hops need their hop index t"
+    my = jax.lax.axis_index(topo.axis)
+    seq = jnp.asarray(t, jnp.int32)
+    msg = (x, my.astype(jnp.int32), seq, checksum(x))
+    moved = _raw_hop(topo, msg, mode)
+    vec = faults.active_vec()
+    if vec is not None:
+        payload, src_tag, seq_tag, csum = moved
+        # data-word faults clobber only the payload FIFOs ...
+        payload = faults.apply(vec, payload, x if prev is None else prev,
+                               t, my, data_only=True)
+        # ... while a stuck link freezes payload and sidecar together
+        moved = faults.apply(vec, (payload, src_tag, seq_tag, csum), msg,
+                             t, my, stall_only=True)
+    payload, src_tag, seq_tag, csum = moved
+    pred = _pred_table(topo)[my]
+    tag_err = jnp.logical_or(src_tag != pred, seq_tag != seq)
+    csum_err = checksum(payload) != csum
+    health = jnp.stack([tag_err, csum_err]).astype(jnp.int32)
+    return payload, health
+
+
 def stream(topo: Topology, x0, n_steps: int,
            consume: Callable[[Any, Any, Any], Any], state0,
-           mode: str = "qlr", unroll: bool = True):
+           mode: str = "qlr", unroll: bool = True, checked: bool = False):
     """Drive a systolic stream: per step, consume the current operand and
     forward it along the topology.
 
     consume(state, operand, step_index) -> state.
     qlr: hop(t) is independent of consume(t) -> overlappable.
     xqueue/sw: a barrier ties consume's output to the hop -> serialized.
+
+    checked=True: every hop rides the tag/checksum sidecar; returns
+    (state, buf, health) with health int32[n_steps, 2] — this PE's
+    per-hop (tag_err, csum_err) flags. Unchecked returns (state, buf).
     """
     assert mode in MODES, mode
 
     def body(carry, t):
         buf, state = carry
         if mode == "qlr":
-            nxt = hop(topo, buf, mode)          # issue the hop first …
+            nxt = hop(topo, buf, mode, t=t, checked=checked)
             state = consume(state, buf, t)      # … compute overlaps
         else:
             state = consume(state, buf, t)
             state, buf = optimization_barrier((state, buf))
-            nxt = hop(topo, buf, mode)
+            nxt = hop(topo, buf, mode, t=t, checked=checked)
+        if checked:
+            nxt, health = nxt
+            return (nxt, state), health
         return (nxt, state), None
 
-    (buf, state), _ = jax.lax.scan(
+    (buf, state), health = jax.lax.scan(
         body, (x0, state0), jnp.arange(n_steps),
         unroll=n_steps if unroll else 1)
+    if checked:
+        return state, buf, health
     return state, buf
 
 
 def stream_carry(topo: Topology, static0, carry0, n_steps: int,
                  update: Callable[[Any, Any, Any], Any], mode: str = "qlr",
-                 unroll: bool = True):
+                 unroll: bool = True, checked: bool = False):
     """Drive a systolic stream whose element *itself* carries state.
 
     ``stream`` keeps per-PE state resident and forwards the operand
@@ -121,26 +236,36 @@ def stream_carry(topo: Topology, static0, carry0, n_steps: int,
     one, so only the static half overlaps.
     xqueue/sw: the whole element is serialized — update, barrier, hop.
 
-    Returns (static, carry) after ``n_steps`` hops.
+    Returns (static, carry) after ``n_steps`` hops. checked=True rides the
+    tag/checksum sidecar on *both* queues (the static and the carried
+    halves are separate FIFOs through the same link) and returns
+    (static, carry, health) with health int32[n_steps, 2] — per-hop error
+    counts summed over the two queues.
     """
     assert mode in MODES, mode
 
     def body(cur, t):
         static, carry = cur
         if mode == "qlr":
-            nxt_static = hop(topo, static, mode)    # overlappable pre-pop
+            nxt_static = hop(topo, static, mode, t=t, checked=checked)
             carry = update(static, carry, t)
-            nxt_carry = hop(topo, carry, mode)
+            nxt_carry = hop(topo, carry, mode, t=t, checked=checked)
         else:
             carry = update(static, carry, t)
             static, carry = optimization_barrier((static, carry))
-            nxt_static = hop(topo, static, mode)
-            nxt_carry = hop(topo, carry, mode)
+            nxt_static = hop(topo, static, mode, t=t, checked=checked)
+            nxt_carry = hop(topo, carry, mode, t=t, checked=checked)
+        if checked:
+            nxt_static, h_static = nxt_static
+            nxt_carry, h_carry = nxt_carry
+            return (nxt_static, nxt_carry), h_static + h_carry
         return (nxt_static, nxt_carry), None
 
-    (static, carry), _ = jax.lax.scan(
+    (static, carry), health = jax.lax.scan(
         body, (static0, carry0), jnp.arange(n_steps),
         unroll=n_steps if unroll else 1)
+    if checked:
+        return static, carry, health
     return static, carry
 
 

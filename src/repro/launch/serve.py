@@ -9,6 +9,12 @@ The same host-side scheduler drives two backends:
                           qlr, or baseline for the all-gather reference).
 For the ring backend pass --mesh DxM (e.g. 2x4 on 8 devices); run under
 XLA_FLAGS=--xla_force_host_platform_device_count=8 to try it on CPU.
+
+Robustness flags (serve/health.py): --checked arms tag/checksum-checked
+links plus a per-tick canary probe on the ring backend; --monitor guards
+every tick (snapshot/rollback, poisoned-request eviction, mode-ladder
+degradation); --deadline SECONDS adds a wall-clock budget per step;
+--eos-token retires a slot when it samples that token.
 """
 from __future__ import annotations
 
@@ -52,19 +58,32 @@ def main(argv=None):
                     help="DATAxMODEL mesh for --backend ring, e.g. 2x4")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="block-prefill up to this many prompt tokens")
+    ap.add_argument("--eos-token", type=int, default=-1,
+                    help="retire a slot when it samples this id (< 0 = off)")
+    ap.add_argument("--checked", action="store_true",
+                    help="checked queue links + per-tick probe (ring only)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="guard every tick with the health monitor")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-step wall-clock budget in seconds (0 = off)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     scfg = ServeConfig(max_batch=args.max_batch, max_seq_len=args.max_seq,
                        temperature=args.temperature,
-                       prefill_chunk=args.prefill_chunk)
+                       prefill_chunk=args.prefill_chunk,
+                       eos_token=args.eos_token)
     model = build_model(cfg)
     params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
     backend = None
     if args.backend == "ring":
         backend = RingShardedBackend(cfg, scfg, params, _make_mesh(args.mesh),
-                                     mode=args.mode)
-    engine = ServeEngine(cfg, scfg, params, backend=backend)
+                                     mode=args.mode, checked=args.checked)
+    health = None
+    if args.monitor or args.deadline > 0:
+        from repro.serve.health import HealthConfig
+        health = HealthConfig(deadline_s=args.deadline)
+    engine = ServeEngine(cfg, scfg, params, backend=backend, health=health)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -82,7 +101,13 @@ def main(argv=None):
           f"{total_new} tokens, {ticks} engine ticks, "
           f"{total_new / dt:.1f} tok/s")
     for r in reqs[:4]:
-        print(f"  rid={r.rid} prompt_len={len(r.prompt)} out={r.out_tokens}")
+        print(f"  rid={r.rid} prompt_len={len(r.prompt)} "
+              f"status={r.status} finish={r.finish_reason or '-'} "
+              f"out={r.out_tokens}")
+    if engine.monitor is not None and engine.monitor.events:
+        print("health events:")
+        for ev in engine.monitor.events:
+            print(f"  tick={ev.tick} [{ev.kind}] mode={ev.mode}: {ev.detail}")
 
 
 if __name__ == "__main__":

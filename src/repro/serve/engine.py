@@ -1,6 +1,6 @@
 """Batched serving engine with continuous batching.
 
-The engine is now a thin composition of two halves:
+The engine is now a thin composition of three halves:
 
 * :class:`repro.serve.scheduler.Scheduler` — host-side continuous batching:
   slot admission/eviction, prompt streaming (chunk-less prefill through the
@@ -10,6 +10,10 @@ The engine is now a thin composition of two halves:
   backend; pass ``RingShardedBackend(cfg, scfg, params, mesh, mode)`` to
   serve from a KV cache ring-sharded along the 'model' mesh axis with the
   paper's systolic link modes moving each row's query around the ring.
+* optionally a :class:`repro.serve.health.HealthMonitor` (pass a
+  ``HealthConfig``) — per-tick link-probe/finite/deadline checks with
+  snapshot-rollback, poisoned-request eviction, and mode-ladder
+  degradation (serve/health.py, DESIGN.md §7).
 
 Each engine tick plans a fixed ``max_batch``-row token batch (each row is a
 slot with its own cache position; the ``active`` mask keeps idle slots'
@@ -28,16 +32,31 @@ from repro.serve.scheduler import Request, Scheduler  # noqa: F401 (re-export)
 from repro.serve.sharded_cache import DecodeBackend
 
 
+class TicksExhaustedError(RuntimeError):
+    """run() hit max_ticks with requests still in flight; they have been
+    marked ``failed`` (terminal), not silently dropped."""
+
+    def __init__(self, msg: str, failed: list):
+        super().__init__(msg)
+        self.failed = failed
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
-                 backend: DecodeBackend | None = None):
+                 backend: DecodeBackend | None = None, health=None):
         self.cfg = cfg
         self.scfg = scfg
+        self._params = params                  # kept for backend rebuilds
         self.backend = backend if backend is not None \
             else DecodeBackend(cfg, scfg, params)
         self.sched = Scheduler(scfg.max_batch, scfg.max_seq_len,
-                               bos_token=scfg.bos_token)
+                               bos_token=scfg.bos_token,
+                               eos_token=scfg.eos_token)
         self.key = jax.random.PRNGKey(scfg.seed)
+        self.monitor = None
+        if health is not None:
+            from repro.serve.health import HealthMonitor
+            self.monitor = HealthMonitor(self, health)
 
     # ------------------------------------------------- compat conveniences
     @property
@@ -80,20 +99,36 @@ class ServeEngine:
                 self.backend.prefill(slot, req.prompt[:n_block])
                 self.sched.note_prefilled(slot, n_block)
 
-    def step(self):
-        """One engine tick = one backend decode step for all slots."""
-        tokens, active, sampling = self.sched.plan()
-        logits = self.backend.step(tokens, active)
+    def _sample_and_commit(self, logits, sampling):
         self.key, sub = jax.random.split(self.key)
         next_tok = np.asarray(sample(logits, sub, self.scfg.temperature,
                                      self.scfg.top_k))
         self.sched.commit(sampling, next_tok)
 
+    def step(self):
+        """One engine tick = one backend decode step for all slots (under
+        the health monitor's guard when one is configured)."""
+        if self.monitor is not None:
+            return self.monitor.guarded_step()
+        tokens, active, sampling = self.sched.plan()
+        logits = self.backend.step(tokens, active)
+        self._sample_and_commit(logits, sampling)
+
     def run(self, max_ticks: int = 10_000) -> int:
-        """Drive until all submitted requests complete. Returns #ticks."""
+        """Drive until all submitted requests complete. Returns #ticks.
+
+        If ``max_ticks`` is exhausted with work still in flight, the
+        leftover requests are marked terminally ``failed`` and
+        :class:`TicksExhaustedError` is raised — a stuck engine must never
+        silently drop requests as if they had been served."""
         ticks = 0
         while self.sched.busy and ticks < max_ticks:
             self._admit()
             self.step()
             ticks += 1
+        if self.sched.busy:
+            failed = self.sched.fail_all(f"max_ticks={max_ticks} exhausted")
+            raise TicksExhaustedError(
+                f"{len(failed)} request(s) still in flight after "
+                f"{max_ticks} ticks; marked failed", failed)
         return ticks

@@ -1,4 +1,18 @@
-"""Token sampling for the serving engine."""
+"""Token sampling for the serving engine.
+
+Edge-case contract (tested in tests/test_serve.py):
+
+* temperature <= 0 — greedy argmax, key unused.
+* NaN logits — treated as -inf, so a partially-NaN row samples its best
+  *finite* logit instead of argmax's silent index-0. A fully-NaN (or
+  fully -inf) row deterministically yields token 0 in both the greedy and
+  stochastic paths; upstream guards (serve/health.py) are expected to
+  evict such rows before sampling, this is just the defined fallback.
+* top_k >= V (or 0) — no truncation, plain temperature sampling.
+* top-k ties at the cutoff — every logit *equal* to the k-th value stays
+  sampleable (the filter keeps >= cutoff, so ties are not arbitrarily
+  dropped by sort order).
+"""
 from __future__ import annotations
 
 import jax
@@ -8,11 +22,12 @@ import jax.numpy as jnp
 def sample(logits: jax.Array, key, temperature: float = 0.0,
            top_k: int = 0) -> jax.Array:
     """logits: [B, V] -> tokens [B]."""
+    logits = jnp.where(jnp.isnan(logits), -jnp.inf, logits)
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
-    if top_k:
+    if top_k and top_k < logits.shape[-1]:
         vals, _ = jax.lax.top_k(logits, top_k)
         cutoff = vals[..., -1:]
-        logits = jnp.where(logits < cutoff, -1e30, logits)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

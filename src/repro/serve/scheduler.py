@@ -17,6 +17,15 @@ over-reserves by one — the safe side). ``submit`` truncates
 that leave no room to generate, so a slot's cache position can never run
 past the cache and silently corrupt attention. Empty prompts are admitted
 directly into sampling by seeding them with ``bos_token``.
+
+Request lifecycle: ``queued -> running -> done | error | failed``. ``done``
+is the only success state (``finish_reason`` says whether the generation
+budget ran out, "length", or the request sampled ``eos_token``, "eos");
+``error`` means the request itself was evicted as poisoned (e.g.
+non-finite logits, serve/health.py) and ``failed`` means the engine gave
+up on it (tick budget exhausted, unrecoverable fault). The health monitor
+relies on :meth:`Scheduler.snapshot`/:meth:`Scheduler.restore` to roll a
+planned-but-unhealthy tick back as if it never happened.
 """
 from __future__ import annotations
 
@@ -24,6 +33,13 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
+
+STATUS_QUEUED = "queued"
+STATUS_RUNNING = "running"
+STATUS_DONE = "done"
+STATUS_ERROR = "error"       # evicted as poisoned
+STATUS_FAILED = "failed"     # engine gave up
+TERMINAL_STATUSES = (STATUS_DONE, STATUS_ERROR, STATUS_FAILED)
 
 
 @dataclass
@@ -34,15 +50,19 @@ class Request:
     out_tokens: list = field(default_factory=list)
     done: bool = False
     truncated: bool = False               # max_new clipped by the seq budget
+    status: str = STATUS_QUEUED
+    finish_reason: str = ""               # length | eos | error | failed
 
 
 class Scheduler:
     """Slot bookkeeping for a fixed decode batch of ``max_batch`` rows."""
 
-    def __init__(self, max_batch: int, max_seq_len: int, bos_token: int = 0):
+    def __init__(self, max_batch: int, max_seq_len: int, bos_token: int = 0,
+                 eos_token: int = -1):
         self.max_batch = max_batch
         self.max_seq = max_seq_len
         self.bos_token = bos_token
+        self.eos_token = eos_token        # < 0 disables EOS-based stopping
         self._next_rid = 0
         self.pending: list[Request] = []
         self.slot_req: list[Optional[Request]] = [None] * max_batch
@@ -86,6 +106,7 @@ class Scheduler:
             if self.slot_req[slot] is not None or not self.pending:
                 continue
             req = self.pending.pop(0)
+            req.status = STATUS_RUNNING
             self.slot_req[slot] = req
             self.slot_prompt_left[slot] = len(req.prompt)
             self.slot_new_left[slot] = req.max_new_tokens
@@ -95,7 +116,18 @@ class Scheduler:
     def note_prefilled(self, slot: int, n_tokens: int) -> None:
         """Record that the backend block-prefilled the first ``n_tokens``
         prompt tokens of ``slot`` (the rest still stream per tick)."""
-        assert 0 < n_tokens < self.slot_prompt_left[slot]
+        if self.slot_req[slot] is None:
+            raise ValueError(f"note_prefilled on empty slot {slot}")
+        if n_tokens <= 0:
+            raise ValueError(
+                f"note_prefilled needs a positive token count, got "
+                f"{n_tokens} for slot {slot}")
+        if n_tokens >= self.slot_prompt_left[slot]:
+            raise ValueError(
+                f"block prefill of {n_tokens} tokens would consume the "
+                f"whole remaining prompt ({int(self.slot_prompt_left[slot])} "
+                f"tokens) of slot {slot}; the final prompt token must "
+                f"stream through the decode step so sampling stays uniform")
         self.slot_prompt_left[slot] -= n_tokens
 
     def plan(self):
@@ -122,12 +154,76 @@ class Scheduler:
         return tokens, active, sampling
 
     def commit(self, sampling: np.ndarray, next_tok: np.ndarray) -> None:
-        """Append this tick's sampled tokens; retire exhausted slots."""
+        """Append this tick's sampled tokens; retire exhausted slots and
+        slots that sampled ``eos_token``."""
         for slot, req in enumerate(self.slot_req):
             if req is None or not sampling[slot]:
                 continue
-            req.out_tokens.append(int(next_tok[slot]))
+            tok = int(next_tok[slot])
+            req.out_tokens.append(tok)
             self.slot_new_left[slot] -= 1
-            if self.slot_new_left[slot] <= 0:
-                req.done = True
-                self.slot_req[slot] = None
+            if self.eos_token >= 0 and tok == self.eos_token:
+                self._retire(slot, "eos")
+            elif self.slot_new_left[slot] <= 0:
+                self._retire(slot, "length")
+
+    def _retire(self, slot: int, reason: str) -> None:
+        req = self.slot_req[slot]
+        req.done = True
+        req.status = STATUS_DONE
+        req.finish_reason = reason
+        self.slot_req[slot] = None
+        self.slot_prompt_left[slot] = 0
+        self.slot_new_left[slot] = 0
+
+    # ------------------------------------------------------ fault surface
+    def evict(self, slot: int, status: str = STATUS_ERROR,
+              reason: str = "") -> Request:
+        """Terminally evict a running request (poisoned or given up on):
+        it keeps whatever tokens were committed but is marked ``status``
+        (never ``done``) and its slot frees for the next admission."""
+        req = self.slot_req[slot]
+        if req is None:
+            raise ValueError(f"evict on empty slot {slot}")
+        req.status = status
+        req.finish_reason = reason or status
+        req.done = False
+        self.slot_req[slot] = None
+        self.slot_prompt_left[slot] = 0
+        self.slot_new_left[slot] = 0
+        return req
+
+    def fail_all(self, reason: str) -> list[Request]:
+        """Mark every in-flight and pending request terminally failed
+        (engine shutdown paths: tick budget exhausted, unrecoverable
+        fault). Returns the failed requests."""
+        failed = []
+        for slot, req in enumerate(self.slot_req):
+            if req is not None:
+                failed.append(self.evict(slot, STATUS_FAILED, reason))
+        for req in self.pending:
+            req.status = STATUS_FAILED
+            req.finish_reason = reason
+            failed.append(req)
+        self.pending.clear()
+        return failed
+
+    def snapshot(self) -> dict:
+        """Capture the mutable tick state. ``plan`` mutates
+        ``slot_prompt_left`` before the backend runs, so a tick that turns
+        out unhealthy must be rolled back with :meth:`restore` before it
+        is re-planned (Request objects are only mutated at commit/retire
+        time, which the health monitor withholds until the step is known
+        healthy)."""
+        return {
+            "slot_req": list(self.slot_req),
+            "pending": list(self.pending),
+            "prompt_left": self.slot_prompt_left.copy(),
+            "new_left": self.slot_new_left.copy(),
+        }
+
+    def restore(self, snap: dict) -> None:
+        self.slot_req = list(snap["slot_req"])
+        self.pending = list(snap["pending"])
+        self.slot_prompt_left = snap["prompt_left"].copy()
+        self.slot_new_left = snap["new_left"].copy()

@@ -18,6 +18,21 @@ and drives whichever backend the engine was built with:
 Both backends expose the same surface — ``step``, ``free_slot``,
 ``prefill_len``/``prefill`` — so the scheduler cannot tell them apart; the
 multidev parity check holds them to token-identical greedy outputs.
+
+Robustness surface (serve/health.py rides on it):
+
+* ``RingShardedBackend(..., checked=True)`` threads an encoded
+  :class:`~repro.core.faults.FaultSpec` *as an argument* of the jitted
+  step (so arming/disarming a fault never retraces) and runs a checked
+  link **probe** after every step: a one-element canary message streamed
+  around the same ring in the same mode with the tag/checksum sidecar of
+  ``queues.stream(..., checked=True)``. The probe shares the model
+  stream's (hop index, PE) coordinates, so a fault that poisons the
+  decode math also trips the probe. ``last_health`` holds the probe's
+  per-class error counts for the tick.
+* ``adopt_cache`` moves a cache snapshot onto this backend's placement —
+  how the health monitor migrates serving state one rung down the mode
+  ladder without losing a token.
 """
 from __future__ import annotations
 
@@ -29,7 +44,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.core import faults, queues
+from repro.core.topology import ring
 from repro.models import build_model
 from repro.models.common import use_sharding
 from repro.sharding.partitioning import (
@@ -100,6 +118,16 @@ class DecodeBackend:
         bit-identically to a fresh engine."""
         self.cache = self._zero(self.cache, slot)
 
+    def adopt_cache(self, cache) -> None:
+        """Take over a cache snapshot from another backend (mode-ladder
+        degradation): place it wherever this backend keeps its cache."""
+        self.cache = jax.device_put(cache)
+
+    def link_health(self) -> dict:
+        """Per-class link error counts of the last step's probe (empty for
+        backends without systolic links)."""
+        return {}
+
     @property
     def supports_prefill(self) -> bool:
         return (self.scfg.prefill_chunk > 0
@@ -130,16 +158,25 @@ class DecodeBackend:
 
 class RingShardedBackend(DecodeBackend):
     """Ring-sharded backend: resident cache shards on the 'model' ring,
-    decode queries streamed over the links in ``mode``."""
+    decode queries streamed over the links in ``mode``.
+
+    checked=True arms the robustness layer: the jitted step takes the
+    host-armed fault vector as an argument (``repro.core.faults``) and a
+    checked canary probe runs after each step, surfacing link health."""
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
-                 mesh: Mesh, mode: str = "qlr", param_axes=None):
+                 mesh: Mesh, mode: str = "qlr", param_axes=None,
+                 checked: bool = False):
         self.mesh = mesh
         self.mode = mode
         self.param_axes = param_axes
-        self.name = f"ring-{mode}"
+        self.checked = checked
+        self.name = f"ring-{mode}" + ("+checked" if checked else "")
+        self.last_health: dict = {}
         cfg = replace(cfg, systolic_mode=mode)
         super().__init__(cfg, scfg, params)
+        self._probe = jax.jit(self._make_probe()) \
+            if checked and mode in queues.MODES else None
 
     def _place_params(self, params):
         if self.param_axes is not None:
@@ -158,11 +195,30 @@ class RingShardedBackend(DecodeBackend):
 
     def _make_step(self):
         model, mesh = self.model, self.mesh
+        if not self.checked:
+            def step(params, cache, tokens, active):
+                with use_sharding(mesh, rules=RING_SERVE_RULES):
+                    return model.decode_step(params, cache, tokens, active)
+            return step
 
-        def step(params, cache, tokens, active):
-            with use_sharding(mesh, rules=RING_SERVE_RULES):
+        def checked_step(params, cache, tokens, active, fault_vec):
+            # the fault spec is a *function input*: arming a fault for a
+            # chaos window (or disarming it after recovery) reuses the
+            # same compiled step
+            with faults.scope(fault_vec), \
+                    use_sharding(mesh, rules=RING_SERVE_RULES):
                 return model.decode_step(params, cache, tokens, active)
-        return step
+        return checked_step
+
+    def step(self, tokens: np.ndarray, active: np.ndarray):
+        if not self.checked:
+            return super().step(tokens, active)
+        vec = faults.injected_vec()
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(active), vec)
+        self.last_health = self._probe_links(vec)
+        return logits
 
     def _make_prefill(self):
         model, mesh = self.model, self.mesh
@@ -172,3 +228,41 @@ class RingShardedBackend(DecodeBackend):
                 return model.prefill_into_cache(params, cache, tokens, row,
                                                 length)
         return prefill
+
+    # --------------------------------------------------------- robustness
+    def _make_probe(self):
+        """Checked canary stream over the serving ring: one small nonzero
+        payload per PE makes a full circuit with the tag/checksum sidecar;
+        any armed fault at (hop t, PE d) — the same coordinates the decode
+        stream hops through — trips a sidecar check here."""
+        mesh, mode = self.mesh, self.mode
+        n = mesh.shape["model"]
+        topo = ring("model", n)
+        payload = (jnp.arange(n * 4, dtype=jnp.float32).reshape(n, 4) + 1.0)
+
+        def local(x_l):
+            _, _, health = queues.stream(
+                topo, x_l, n, lambda s, b, t: s + jnp.sum(b),
+                jnp.zeros(()), mode, checked=True)
+            return jnp.sum(health, axis=0)[None]        # [1, 2]
+
+        fn = shard_map(local, mesh=mesh, in_specs=(P("model", None),),
+                       out_specs=P("model", None), check_vma=False)
+
+        def probe(fault_vec):
+            with faults.scope(fault_vec):
+                return fn(payload)                      # [n, 2]
+        return probe
+
+    def _probe_links(self, vec) -> dict:
+        if self._probe is None:
+            return {}
+        errs = np.asarray(self._probe(vec)).sum(axis=0)
+        return {"tag_errors": int(errs[0]), "csum_errors": int(errs[1])}
+
+    def link_health(self) -> dict:
+        return dict(self.last_health)
+
+    def adopt_cache(self, cache) -> None:
+        sh = jax.tree_util.tree_map(lambda l: l.sharding, self.cache)
+        self.cache = jax.device_put(cache, sh)

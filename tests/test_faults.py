@@ -1,0 +1,245 @@
+"""Chaos tests for the queue fault layer (core/faults.py), checked links
+(core/queues.py checked=True) and the numeric guardrails (core/guard.py).
+
+Single-device tier-1: the topology axis is realized as a
+``jax.vmap(..., axis_name=...)`` axis (collectives batch over vmap axes
+exactly as over mesh axes), so every link mode's semantics are exercised
+without fake devices. The same detection matrix runs on 8 fake devices
+under shard_map in tests/multidev/check_fault_recovery.py.
+
+Detection contract (DESIGN.md §7): data-word faults (corrupt, drop) touch
+only the payload FIFOs and trip the *checksum* check; stuck/late links
+(stale, slow) freeze payload and sidecar together and trip the *tag*
+check via the sender-id stamp — which works even at hop 0, where a
+sequence number alone could not tell a frozen message from a fresh one.
+Detection fires at the fault site: downstream PEs re-stamp whatever they
+hold, so a poisoned payload propagates with a valid sidecar (like real
+per-link CRC) — callers must treat any nonzero health as poisoning the
+whole stream.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import faults, guard, queues
+from repro.core.topology import ring
+
+N = 4
+N_STEPS = 4
+FAULT_HOP = 1
+FAULT_DEV = 2
+
+
+def _payload(n=N, k=3):
+    # strictly positive so a dropped (zeroed) payload always changes the
+    # checksum — all-zero payloads are the digest's documented blind spot
+    return (jnp.arange(n * k, dtype=jnp.float32).reshape(n, k) + 1.0) / 7.0
+
+
+def _run_stream(mode, checked, spec=None, n_steps=N_STEPS):
+    topo = ring("pe", N)
+    xs = _payload()
+    state0 = jnp.zeros((N, xs.shape[1]))
+
+    def device_fn(x, s0):
+        return queues.stream(topo, x, n_steps, lambda s, b, t: s + b, s0,
+                             mode, checked=checked)
+
+    fn = jax.vmap(device_fn, axis_name=topo.axis)
+    if spec is None:
+        return fn(xs, state0)
+    with faults.inject(spec):
+        return fn(xs, state0)
+
+
+def _run_stream_carry(mode, spec=None):
+    topo = ring("pe", N)
+    static = _payload()
+    carry0 = jnp.zeros_like(static)
+
+    def device_fn(st, ca):
+        return queues.stream_carry(topo, st, ca, N_STEPS,
+                                   lambda s, c, t: c + s, mode, checked=True)
+
+    fn = jax.vmap(device_fn, axis_name=topo.axis)
+    if spec is None:
+        return fn(static, carry0)
+    with faults.inject(spec):
+        return fn(static, carry0)
+
+
+# --- FaultSpec encoding ------------------------------------------------------
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        faults.FaultSpec("none")
+    with pytest.raises(ValueError):
+        faults.FaultSpec("meteor-strike")
+    vec = np.asarray(faults.FaultSpec("stale", hop=2, device=1, seed=9)
+                     .encode())
+    assert vec.tolist() == [faults.KINDS.index("stale"), 2, 1, 9]
+    assert np.asarray(faults.no_fault_vec()).tolist() == [0, 0, 0, 0]
+
+
+def test_injected_vec_tracks_registry():
+    assert np.asarray(faults.injected_vec()).tolist() == [0, 0, 0, 0]
+    spec = faults.FaultSpec("drop", hop=1)
+    with faults.inject(spec):
+        assert faults.injected() is spec
+        assert np.asarray(faults.injected_vec())[0] == \
+            faults.KINDS.index("drop")
+    assert faults.injected() is None
+
+
+# --- checked links: clean parity --------------------------------------------
+@pytest.mark.parametrize("mode", queues.MODES)
+def test_checked_stream_clean_matches_unchecked_bitwise(mode):
+    """The sidecar must be a pure observer: with no fault armed, checked
+    and unchecked streams agree bit-for-bit and health is all-zero."""
+    state_u, buf_u = _run_stream(mode, checked=False)
+    state_c, buf_c, health = _run_stream(mode, checked=True)
+    np.testing.assert_array_equal(np.asarray(state_u), np.asarray(state_c))
+    np.testing.assert_array_equal(np.asarray(buf_u), np.asarray(buf_c))
+    assert np.asarray(health).sum() == 0
+
+
+# --- checked links: the detection matrix ------------------------------------
+@pytest.mark.parametrize("mode", queues.MODES)
+@pytest.mark.parametrize("kind", [k for k in faults.KINDS if k != "none"])
+def test_detection_matrix_stream(mode, kind):
+    """Every fault class x every link mode is detected, at the right PE,
+    at the right hop, in the right health column."""
+    spec = faults.FaultSpec(kind, hop=FAULT_HOP, device=FAULT_DEV, seed=3)
+    _, _, health = _run_stream(mode, checked=True, spec=spec)
+    health = np.asarray(health)                      # [N, N_STEPS, 2]
+
+    others = np.delete(health, FAULT_DEV, axis=0)
+    assert others.sum() == 0, "fault detected away from the fault site"
+    tag, csum = health[FAULT_DEV, :, 0], health[FAULT_DEV, :, 1]
+    if kind in ("corrupt", "drop"):
+        # data FIFOs clobbered, control FIFO survives -> checksum check
+        assert tag.sum() == 0
+        assert csum.tolist() == [1 if t == FAULT_HOP else 0
+                                 for t in range(N_STEPS)]
+    elif kind == "slow":
+        # one-hop hiccup: frozen message carries the PE's own sender id
+        assert csum.sum() == 0
+        assert tag.tolist() == [1 if t == FAULT_HOP else 0
+                                for t in range(N_STEPS)]
+    else:                                            # stale: persistent
+        assert csum.sum() == 0
+        assert tag.tolist() == [1 if t >= FAULT_HOP else 0
+                                for t in range(N_STEPS)]
+
+
+@pytest.mark.parametrize("mode", queues.MODES)
+def test_hop_zero_stall_detected(mode):
+    """A link stuck from the very first hop: sequence numbers agree (both
+    say t=0), only the sender-id stamp can tell — and does."""
+    spec = faults.FaultSpec("stale", hop=0, device=FAULT_DEV)
+    _, _, health = _run_stream(mode, checked=True, spec=spec)
+    health = np.asarray(health)
+    assert health[FAULT_DEV, :, 0].tolist() == [1] * N_STEPS
+    assert health[FAULT_DEV, :, 1].sum() == 0
+
+
+@pytest.mark.parametrize("kind", [k for k in faults.KINDS if k != "none"])
+def test_detection_matrix_stream_carry(kind):
+    """stream_carry rides the sidecar on both of its queues (static and
+    carried halves), so each faulted hop reports both."""
+    spec = faults.FaultSpec(kind, hop=FAULT_HOP, device=FAULT_DEV, seed=5)
+    _, _, health = _run_stream_carry("qlr", spec=spec)
+    health = np.asarray(health)                      # [N, N_STEPS, 2]
+    assert np.delete(health, FAULT_DEV, axis=0).sum() == 0
+    col = 1 if kind in ("corrupt", "drop") else 0
+    assert health[FAULT_DEV, FAULT_HOP, col] == 2    # both queues tripped
+    assert health[FAULT_DEV, :, 1 - col].sum() == 0
+
+
+def test_stream_carry_clean_checked_parity():
+    topo = ring("pe", N)
+    static = _payload()
+    carry0 = jnp.zeros_like(static)
+    su, cu = jax.vmap(
+        lambda st, ca: queues.stream_carry(topo, st, ca, N_STEPS,
+                                           lambda s, c, t: c + s, "qlr"),
+        axis_name=topo.axis)(static, carry0)
+    sc, cc, health = _run_stream_carry("qlr")
+    np.testing.assert_array_equal(np.asarray(su), np.asarray(sc))
+    np.testing.assert_array_equal(np.asarray(cu), np.asarray(cc))
+    assert np.asarray(health).sum() == 0
+
+
+# --- unchecked links fail silently (why the sidecar exists) -----------------
+def test_unchecked_corruption_is_silent():
+    spec = faults.FaultSpec("corrupt", hop=FAULT_HOP, device=FAULT_DEV)
+    state, _ = _run_stream("qlr", checked=False, spec=spec)
+    state = np.asarray(state)
+    assert np.isnan(state[FAULT_DEV]).any(), \
+        "corrupt fault should have poisoned the faulted PE's state"
+    # and nothing raised, nothing reported: silent poisoning
+
+
+def test_drop_fault_zeros_payload_unchecked():
+    spec = faults.FaultSpec("drop", hop=0, device=0)
+    state, _ = _run_stream("qlr", checked=False, spec=spec)
+    clean, _ = _run_stream("qlr", checked=False)
+    assert not np.array_equal(np.asarray(state), np.asarray(clean))
+    assert np.isfinite(np.asarray(state)).all()
+
+
+# --- fault vec as a jit argument: no retrace on (dis)arm --------------------
+def test_fault_vec_is_a_jit_argument():
+    topo = ring("pe", N)
+    traces = []
+
+    @jax.jit
+    def step(xs, vec):
+        traces.append(1)
+        with faults.scope(vec):
+            def device_fn(x):
+                return queues.stream(topo, x, N_STEPS,
+                                     lambda s, b, t: s + b,
+                                     jnp.zeros(x.shape[-1]), "qlr",
+                                     checked=True)
+            return jax.vmap(device_fn, axis_name=topo.axis)(xs)
+
+    xs = _payload()
+    _, _, h_clean = step(xs, faults.no_fault_vec())
+    _, _, h_bad = step(
+        xs, faults.FaultSpec("corrupt", hop=1, device=2).encode())
+    assert np.asarray(h_clean).sum() == 0
+    assert np.asarray(h_bad).sum() == 1
+    assert len(traces) == 1, "arming a fault must not retrace the step"
+
+
+# --- checksum ----------------------------------------------------------------
+def test_checksum_order_independent_and_sensitive():
+    x = _payload()
+    a = np.asarray(queues.checksum(x))
+    b = np.asarray(queues.checksum(x[::-1]))
+    assert a == b                                    # associative digest
+    assert a != np.asarray(queues.checksum(x.at[0, 0].add(1.0)))
+    mixed = {"f": x, "i": jnp.arange(5, dtype=jnp.int32)}
+    assert np.asarray(queues.checksum(mixed)) != a
+
+
+# --- guardrails --------------------------------------------------------------
+def test_all_finite_and_row_finite():
+    good = {"a": jnp.ones((2, 3)), "n": jnp.arange(4)}
+    assert bool(guard.all_finite(good))
+    bad = {"a": jnp.ones((2, 3)).at[1, 2].set(jnp.nan)}
+    assert not bool(guard.all_finite(bad))
+    logits = np.zeros((3, 4), np.float32)
+    logits[1, 0] = np.inf
+    assert guard.row_finite(logits).tolist() == [True, False, True]
+
+
+def test_check_finite_names_the_leaf():
+    tree = {"ok": jnp.ones(3), "bad": jnp.full(4, jnp.inf)}
+    guard.check_finite({"ok": tree["ok"]}, "clean")   # no raise
+    with pytest.raises(guard.NonFiniteError, match="bad.*4/4"):
+        guard.check_finite(tree, "ring output")

@@ -98,6 +98,25 @@ def test_systolic_model_parity_multidev():
         assert results[f"systolic_model_{mode}"]["ok"]
 
 
+def test_fault_recovery_multidev():
+    """Chaos: every fault class x link mode trips the checked-link sidecar
+    at the targeted (hop, PE) under shard_map, and a checked+monitored
+    ring engine hit mid-run cascades down the mode ladder and finishes
+    with tokens bitwise-identical to a fault-free run force-degraded
+    along the same ladder (recovery leaves zero trace)."""
+    results = run_check("check_fault_recovery.py")
+    for mode in ("sw", "xqueue", "qlr"):
+        assert results[f"clean_parity_{mode}"]["ok"]
+        for kind in ("corrupt", "drop", "stale", "slow"):
+            assert results[f"detect_{mode}_{kind}"]["ok"]
+    assert results["ref_ladder"]["ok"]
+    for kind in ("corrupt", "drop", "stale", "slow"):
+        assert results[f"recover_{kind}_ladder"]["ok"]
+        assert results[f"recover_{kind}_status"]["ok"]
+        assert results[f"recover_{kind}_bitwise"]["ok"]
+    assert results["post_recovery_serves"]["ok"]
+
+
 def test_ring_decode_multidev():
     """Ring-sharded KV decode: the decode core matches dense masked
     attention numerically, and a ring-sharded ServeEngine produces the

@@ -1,4 +1,7 @@
-"""Serving engine tests: continuous batching equals sequential decode."""
+"""Serving engine tests: continuous batching equals sequential decode,
+request lifecycle (EOS / failure / eviction), sampler edge cases, and the
+health monitor's single-device behaviors (non-finite eviction with exact
+rollback, ladder exhaustion)."""
 import numpy as np
 import pytest
 
@@ -7,8 +10,10 @@ import jax.numpy as jnp
 
 from repro.configs import ServeConfig, get_smoke_config
 from repro.models import build_model, split_tree
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, TicksExhaustedError
+from repro.serve.health import FatalFaultError, HealthConfig
 from repro.serve.sample import sample
+from repro.serve.scheduler import Scheduler
 
 
 @pytest.fixture(scope="module")
@@ -157,6 +162,174 @@ def test_sequence_budget_truncates_and_rejects(qwen):
         eng.submit(np.arange(16, dtype=np.int32), max_new_tokens=1)
     with pytest.raises(ValueError):
         eng.submit(np.arange(99, dtype=np.int32), max_new_tokens=1)
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle: max_ticks failure, EOS, prefill accounting errors
+# ---------------------------------------------------------------------------
+
+
+def test_run_exhausting_max_ticks_fails_leftovers(qwen):
+    """A stuck run must not silently drop in-flight work: every leftover
+    request (running *and* still pending) is terminally failed and
+    TicksExhaustedError carries them."""
+    cfg, model, params = qwen
+    eng = ServeEngine(cfg, ServeConfig(max_batch=1, max_seq_len=64), params)
+    eng.submit(np.array([5, 9, 13]), max_new_tokens=5)   # needs ~8 ticks
+    eng.submit(np.array([7, 2]), max_new_tokens=3)       # never admitted
+    reqs = list(eng.pending)
+    with pytest.raises(TicksExhaustedError) as exc:
+        eng.run(max_ticks=2)
+    assert sorted(r.rid for r in exc.value.failed) == [r.rid for r in reqs]
+    for r in reqs:
+        assert r.status == "failed" and not r.done
+        assert "max_ticks=2" in r.finish_reason
+    assert not eng.sched.busy                            # nothing lingers
+
+
+def test_eos_token_retires_slot(qwen):
+    """With ServeConfig.eos_token set, a slot retires the tick it samples
+    that token (finish_reason 'eos'), keeping the EOS in its output."""
+    cfg, model, params = qwen
+    prompt = np.array([5, 9, 13])
+
+    ref_eng = ServeEngine(cfg, ServeConfig(max_batch=1, max_seq_len=64),
+                          params)
+    ref_eng.submit(prompt, max_new_tokens=6)
+    ref = ref_eng.pending[0]
+    ref_eng.run()
+    assert ref.finish_reason == "length"
+    eos = ref.out_tokens[2]                 # a token the model will emit
+    cut = ref.out_tokens.index(eos)         # first time it appears
+
+    eng = ServeEngine(cfg, ServeConfig(max_batch=1, max_seq_len=64,
+                                       eos_token=eos), params)
+    eng.submit(prompt, max_new_tokens=6)
+    req = eng.pending[0]
+    eng.run()
+    assert req.done and req.status == "done"
+    assert req.finish_reason == "eos"
+    assert req.out_tokens == ref.out_tokens[:cut + 1]
+
+
+def test_note_prefilled_rejects_bad_accounting():
+    sched = Scheduler(max_batch=2, max_seq_len=32)
+    sched.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=4)
+    sched.admit()
+    with pytest.raises(ValueError, match="empty slot"):
+        sched.note_prefilled(1, 2)
+    with pytest.raises(ValueError, match="positive token count"):
+        sched.note_prefilled(0, 0)
+    with pytest.raises(ValueError, match="whole remaining prompt"):
+        sched.note_prefilled(0, 5)          # must leave >= 1 to stream
+    sched.note_prefilled(0, 4)              # legal: one token left
+    assert sched.slot_prompt_left[0] == 1
+
+
+def test_scheduler_evict_and_snapshot_roundtrip():
+    sched = Scheduler(max_batch=2, max_seq_len=32)
+    a = sched.submit(np.array([1, 2], np.int32), max_new_tokens=3)
+    b = sched.submit(np.array([3], np.int32), max_new_tokens=3)
+    sched.admit()
+    snap = sched.snapshot()
+    sched.plan()                            # mutates prompt_left
+    evicted = sched.evict(0, reason="poisoned")
+    assert evicted is a and a.status == "error" and not a.done
+    assert a.finish_reason == "poisoned"
+    with pytest.raises(ValueError, match="empty slot"):
+        sched.evict(0)
+    sched.restore(snap)                     # rollback resurrects the tick
+    assert sched.slot_req[0] is a
+    assert sched.slot_prompt_left[0] == 2 and sched.slot_prompt_left[1] == 1
+    assert b.status == "running"
+
+
+# ---------------------------------------------------------------------------
+# Sampler edge cases (the contract in serve/sample.py's docstring)
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_nan_logits_defined_behavior():
+    logits = jnp.asarray([[1.0, jnp.nan, 3.0, 2.0],
+                          [jnp.nan, jnp.nan, jnp.nan, jnp.nan]])
+    toks = sample(logits, jax.random.PRNGKey(0), temperature=0.0)
+    assert toks.tolist() == [2, 0]          # best finite; all-NaN -> 0
+    toks = sample(logits, jax.random.PRNGKey(1), temperature=1.0)
+    assert int(toks[1]) == 0                # stochastic path too
+    assert int(toks[0]) != 1                # NaN index never sampled
+
+
+def test_sampler_topk_geq_vocab_is_noop():
+    logits = jnp.asarray([[0.5, -1.0, 2.0]])
+    for k in (3, 7):
+        a = sample(logits, jax.random.PRNGKey(2), temperature=1.0, top_k=k)
+        b = sample(logits, jax.random.PRNGKey(2), temperature=1.0, top_k=0)
+        assert a.tolist() == b.tolist()
+
+
+def test_sampler_topk_ties_at_cutoff_stay_sampleable():
+    logits = jnp.asarray([[0.0, 5.0, 5.0, 1.0]])
+    seen = {int(sample(logits, jax.random.PRNGKey(s), temperature=1.0,
+                       top_k=1)[0]) for s in range(40)}
+    assert seen == {1, 2}                   # both tied maxima, nothing else
+
+
+# ---------------------------------------------------------------------------
+# Health monitor on a single device (ring cases: tests/multidev)
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_evicts_nonfinite_rows_with_exact_rollback(qwen):
+    """A NaN logit row indicts only that request: it is evicted (status
+    'error', committed tokens kept), the step's cache writes are rolled
+    back, and the surviving request's tokens are bitwise those of an
+    undisturbed run."""
+    cfg, model, params = qwen
+    scfg = ServeConfig(max_batch=2, max_seq_len=64)
+    eng = ServeEngine(cfg, scfg, params, health=HealthConfig())
+    eng.submit(np.array([5, 9, 13]), max_new_tokens=4)
+    eng.submit(np.array([7, 2]), max_new_tokens=4)
+    victim, survivor = list(eng.pending)
+
+    for _ in range(3):                      # victim has committed a token
+        eng._admit()
+        eng.step()
+    assert len(victim.out_tokens) == 1
+
+    orig = eng.backend.step
+    fired = []
+
+    def poisoned(tokens, active):
+        logits = orig(tokens, active)
+        if not fired:
+            fired.append(True)
+            logits = logits.at[0, :].set(jnp.nan)
+        return logits
+
+    eng.backend.step = poisoned
+    eng.run()
+    assert victim.status == "error" and not victim.done
+    assert victim.finish_reason == "non-finite logits"
+    assert len(victim.out_tokens) == 1      # keeps what was committed
+    assert [e.kind for e in eng.monitor.events] == ["nonfinite"]
+    assert survivor.done
+    assert survivor.out_tokens == sequential_greedy(model, params, [7, 2], 4)
+
+
+def test_monitor_ladder_exhaustion_is_fatal(qwen):
+    """A dense backend is the last ladder rung: a persistent 'link' fault
+    there cannot be degraded away and must fail all requests loudly."""
+    cfg, model, params = qwen
+    eng = ServeEngine(cfg, ServeConfig(max_batch=1, max_seq_len=64), params,
+                      health=HealthConfig(max_retries=2))
+    eng.backend.link_health = lambda: {"tag_errors": 1}
+    eng.submit(np.array([5, 9]), max_new_tokens=3)
+    req = eng.pending[0]
+    with pytest.raises(FatalFaultError) as exc:
+        eng.run()
+    assert req.status == "failed" and not req.done
+    assert exc.value.failed == [req]
+    assert not eng.sched.busy
 
 
 def test_dense_block_prefill_matches_streaming(qwen):

@@ -17,8 +17,6 @@ an 8-ring for the stream rows) and persisted to BENCH_guardrails.json:
 from __future__ import annotations
 
 import argparse
-import json
-from pathlib import Path
 
 import numpy as np
 
@@ -26,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, emit_json, time_fn
 from repro.compat import shard_map
 from repro.configs import ServeConfig, get_smoke_config
 from repro.core import faults, queues
@@ -99,11 +97,8 @@ def run(quick: bool = False):
     iters = 3 if quick else 10
     bench_streams(results, n=8, k=256 if quick else 4096, iters=iters)
     bench_serve_step(results, iters=iters)
-    out = {"config": {"n_devices": jax.device_count(), "quick": quick},
-           "measurements": results}
-    path = Path(__file__).resolve().parents[1] / "BENCH_guardrails.json"
-    path.write_text(json.dumps(out, indent=2))
-    emit("guardrails_json", 0.0, str(path.name))
+    emit_json("guardrails", {"measurements": results},
+              config={"n_devices": jax.device_count(), "quick": quick})
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from benchmarks.common import emit, hlo_counts, time_fn
+from benchmarks.common import emit, emit_json, hlo_counts, time_fn
 from repro.core import energy
 from repro.core.halo import conv2d_ref, conv2d_systolic, halo_traffic
 from repro.launch.mesh import make_mesh
@@ -47,6 +47,7 @@ def run(h: int = 256, w: int = 256, n_dev: int = 8):
 
     ref = None
     results = {}
+    rows: dict = {}
     for name, fn in variants.items():
         y = fn(x, kern)
         if ref is None:
@@ -66,13 +67,24 @@ def run(h: int = 256, w: int = 256, n_dev: int = 8):
                 traffic["systolic_bytes"] if name == "conv2d_bl" else 0),
             instr_overhead_ops=instr)
         results[name] = us
+        rows[name] = {
+            "us_per_call": round(us, 1),
+            "total_ops": counts["total_ops"],
+            "n_collectives": counts["n_collectives"],
+            "modeled_gops_w": round(rep.gops_per_w, 1),
+            "pe_fraction": round(rep.pe_fraction, 4),
+        }
         emit(name, us,
              f"ops={counts['total_ops']};colls={counts['n_collectives']};"
              f"modeled_gops_w={rep.gops_per_w:.0f};pe_pct={100*rep.pe_fraction:.0f}")
     if "conv2d_sw" in results:
         for m in ("xqueue", "qlr"):
+            speedup = results["conv2d_sw"] / results[f"conv2d_{m}"]
             emit(f"conv2d_speedup_{m}_vs_sw", results[f"conv2d_{m}"],
-                 f"speedup={results['conv2d_sw'] / results[f'conv2d_{m}']:.2f}x")
+                 f"speedup={speedup:.2f}x")
+            rows[f"conv2d_{m}"]["speedup_vs_sw"] = round(speedup, 3)
+    emit_json("link_impl", {"variants": rows},
+              config={"n_devices": n_dev, "h": h, "w": w})
     return results
 
 

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from benchmarks.common import emit, hlo_counts, time_fn
+from benchmarks.common import emit, emit_json, hlo_counts, time_fn
 from repro.compat import shard_map
 from repro.core import energy
 from repro.core.collective_matmul import cannon_matmul, ring_ag_matmul
@@ -71,6 +71,7 @@ def run(n_dev: int = 16, base: int = 128):
     mesh = make_mesh((n_dev,), ("pe",))
     key = jax.random.PRNGKey(0)
     results = {}
+    rows: dict = {}
 
     # --- v1..v4: pure-systolic Cannon with growing per-PE tiles ----------
     grid = int(np.sqrt(n_dev))
@@ -104,6 +105,11 @@ def run(n_dev: int = 16, base: int = 128):
         emit(name, us, f"util={util:.2f};paper_util_measured={paper_util};"
                        f"modeled_gops_w={rep.gops_per_w:.0f};"
                        f"queue_ops={queue_ops}")
+        rows[name] = {"us_per_call": round(us, 1),
+                      "utilization": round(util, 4),
+                      "paper_util_measured": paper_util,
+                      "modeled_gops_w": round(rep.gops_per_w, 1),
+                      "queue_ops": queue_ops}
 
     # --- v5..v8: hybrid ring AG-matmul (A streamed, B resident) ----------
     m, k, n = 512, 256, 256
@@ -141,6 +147,12 @@ def run(n_dev: int = 16, base: int = 128):
         results[name] = us
         emit(name, us, f"util={util:.2f};modeled_gops_w={rep.gops_per_w:.0f};"
                        f"mode={mode}")
+        rows[name] = {"us_per_call": round(us, 1),
+                      "utilization": round(util, 4),
+                      "modeled_gops_w": round(rep.gops_per_w, 1),
+                      "mode": mode}
+    emit_json("matmul_variants", {"variants": rows},
+              config={"n_devices": n_dev, "base": base})
     return results
 
 

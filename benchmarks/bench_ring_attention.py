@@ -4,29 +4,41 @@ attention core.
 Sweeps the four link modes over sequence lengths on 8 fake devices
 (sequence-parallel over a 'model' ring). Reported per (mode, S): wall
 time, static HLO op count (sw inflates with the software-FIFO bookkeeping
-exactly like the paper's Fig. 3), collective count, and MEMPOOL-modeled
-energy from the attention FLOPs and the per-class traffic split:
+exactly like the paper's Fig. 3), collective count, and — new in
+DESIGN.md §8 — compute-unit utilization % and MEMPOOL-modeled GOPS/W from
+*measured* link telemetry: a :mod:`repro.obs.linkstats` scope around the
+same jitted schedule counts the bytes each mode actually moved (queue
+payload for the ring modes, shared-memory multicast for the baseline),
+and :func:`repro.obs.utilization.report` folds those counts through the
+paper's §VI-C issue-slot model. Nothing here is an analytic estimate of
+the traffic; only the per-word instruction costs are model constants.
 
-  ring modes — K/V bytes ride the systolic links ((n-1)/n of the K/V
-               volume, n hops), q/out stay local;
-  baseline   — the same K/V bytes move as shared-memory multicast
-               (all-gather) traffic instead.
+Results persist to BENCH_ring_attention.json (benchmarks/common.emit_json).
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m benchmarks.bench_ring_attention
 """
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from benchmarks.common import emit, hlo_counts, time_fn
-from repro.core import energy
+from benchmarks.common import emit, emit_json, hlo_counts, time_fn
 from repro.core.ring_attention import MODES, systolic_ring_attention
 from repro.launch.mesh import make_mesh
+from repro.obs import linkstats, utilization
+
+
+def measured_stats(fn_mode, *args):
+    """Run the schedule once under an armed telemetry scope; returns the
+    mesh-total LinkStats as a plain dict (real counts, not estimates)."""
+    def instrumented(*a):
+        with linkstats.collect(1) as sc:
+            y = fn_mode(*a)
+        return y, sc.stats
+    _, stats = jax.jit(instrumented)(*args)
+    return stats.as_dict()
 
 
 def run(n_dev: int = 8, seq_lens=(512, 1024, 2048), b: int = 1,
@@ -34,6 +46,7 @@ def run(n_dev: int = 8, seq_lens=(512, 1024, 2048), b: int = 1,
     mesh = make_mesh((n_dev,), ("model",))
     key = jax.random.PRNGKey(0)
     spec = NamedSharding(mesh, P(None, "model", None, None))
+    rows: dict = {}
 
     for s in seq_lens:
         ks = jax.random.split(key, 3)
@@ -46,11 +59,12 @@ def run(n_dev: int = 8, seq_lens=(512, 1024, 2048), b: int = 1,
 
         # causal attention FLOPs: 2 matmuls over ~s^2/2 score entries
         flops = 2 * 2 * b * h * (s * s / 2) * hd
-        kv_bytes = 2 * b * s * h * hd * 4
         ref = None
+        reports = []
         for mode in MODES:
-            fn = jax.jit(lambda q, k, v, m=mode: systolic_ring_attention(
-                q, k, v, mesh, m, causal=True))
+            sched = lambda q, k, v, m=mode: systolic_ring_attention(
+                q, k, v, mesh, m, causal=True)
+            fn = jax.jit(sched)
             y = fn(q, k, v)
             if ref is None:
                 ref = y
@@ -58,17 +72,30 @@ def run(n_dev: int = 8, seq_lens=(512, 1024, 2048), b: int = 1,
             assert err < 1e-4, (mode, s, err)
             us = time_fn(fn, q, k, v)
             counts = hlo_counts(fn, q, k, v)
-            # traffic classes: streamed K/V on links vs multicast fetch
-            link_bytes = 0 if mode == "baseline" else \
-                kv_bytes * (n_dev - 1) // n_dev
-            shared = kv_bytes if mode == "baseline" else kv_bytes // n_dev
-            acct = energy.account(
-                energy.MEMPOOL, flops=flops, local_bytes=shared,
-                remote_bytes=link_bytes)
+            stats = measured_stats(sched, q, k, v)
+            rep = utilization.report(stats, flops=flops, mode=mode)
+            reports.append(rep)
             emit(f"ring_attn_{mode}_s{s}", us,
                  f"ops={counts['total_ops']};"
                  f"colls={counts['n_collectives']};"
-                 f"gopsw={acct.gops_per_w:.0f};pe={acct.pe_fraction:.2f}")
+                 f"util={100 * rep.utilization:.1f}%;"
+                 f"gopsw={rep.gops_per_w:.0f};"
+                 f"qwords={rep.queue_words:.0f};loads={rep.load_words:.0f}")
+            rows[f"{mode}_s{s}"] = {
+                "us_per_call": round(us, 1),
+                "total_ops": counts["total_ops"],
+                "n_collectives": counts["n_collectives"],
+                "utilization": round(rep.utilization, 4),
+                "modeled_gops_w": round(rep.gops_per_w, 1),
+                "link_stats": stats,
+            }
+        for line in utilization.table(reports).splitlines():
+            print(f"# s={s} {line}")
+
+    emit_json("ring_attention", {"modes": rows},
+              config={"n_devices": n_dev, "seq_lens": list(seq_lens),
+                      "batch": b, "heads": h, "head_dim": hd})
+    return rows
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from benchmarks.common import emit, hlo_counts, time_fn
+from benchmarks.common import emit, emit_json, hlo_counts, time_fn
 from repro.configs.base import ModelConfig
 from repro.core import energy
 from repro.core.ring_moe import MODES, systolic_ring_moe
@@ -35,6 +35,7 @@ def run(n_dev: int = 8, topks=(1, 2, 4), e: int = 8, s: int = 256,
         b: int = 2, d: int = 64, f: int = 128):
     mesh = make_mesh((n_dev,), ("model",))
     tok_spec = NamedSharding(mesh, P(None, "model", None))
+    rows: dict = {}
 
     for k in topks:
         cfg = ModelConfig(
@@ -78,6 +79,19 @@ def run(n_dev: int = 8, topks=(1, 2, 4), e: int = 8, s: int = 256,
                  f"ops={counts['total_ops']};"
                  f"colls={counts['n_collectives']};"
                  f"gopsw={acct.gops_per_w:.0f};pe={acct.pe_fraction:.2f}")
+            rows[f"{mode}_k{k}"] = {
+                "us_per_call": round(us, 1),
+                "total_ops": counts["total_ops"],
+                "n_collectives": counts["n_collectives"],
+                "modeled_gops_w": round(acct.gops_per_w, 1),
+                "pe_fraction": round(acct.pe_fraction, 4),
+            }
+
+    emit_json("ring_moe", {"modes": rows},
+              config={"n_devices": n_dev, "topks": list(topks),
+                      "experts": e, "seq": s, "batch": b, "d_model": d,
+                      "d_ff": f})
+    return rows
 
 
 if __name__ == "__main__":

@@ -20,16 +20,14 @@ Per-mode numbers are also persisted to BENCH_serve.json at the repo root.
 """
 from __future__ import annotations
 
-import json
 import time
 from dataclasses import replace
-from pathlib import Path
 
 import numpy as np
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_json
 from repro.configs import ServeConfig, get_smoke_config
 from repro.models import build_model, split_tree
 from repro.serve.engine import ServeEngine
@@ -102,14 +100,11 @@ def run(n_dev: int = 8):
             RingShardedBackend(cfg, sc, params, mesh, mode=mode)
         bench_backend(name, cfg, sc, params, be, results)
 
-    out = {"config": {"arch": "qwen3-0.6b-smoke", "max_batch": scfg.max_batch,
+    emit_json("serve", {"backends": results},
+              config={"arch": "qwen3-0.6b-smoke", "max_batch": scfg.max_batch,
                       "max_seq_len": scfg.max_seq_len, "prompt_len": P_LEN,
                       "max_new_tokens": N_NEW, "n_devices": n_dev,
-                      "mesh": f"{n_dev // 4}x4"},
-           "backends": results}
-    path = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
-    path.write_text(json.dumps(out, indent=2))
-    emit("serve_json", 0.0, str(path.name))
+                      "mesh": f"{n_dev // 4}x4"})
 
 
 if __name__ == "__main__":

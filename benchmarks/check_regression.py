@@ -1,0 +1,96 @@
+"""Bench-regression gate: diff fresh BENCH_*.json against committed copies.
+
+CI regenerates the BENCH_*.json files on the PR's code, then compares
+each throughput leaf (any numeric key containing ``tok_s``) against the
+committed baseline snapshot: a fresh value more than ``--threshold``
+(default 25%) *below* the baseline fails the job. Non-throughput leaves
+(wall times, op counts, link stats) are reported but never gate — CI
+runners are too noisy for latency assertions, while a >25% tokens/s
+collapse on the same code+config means a real scheduling/step regression.
+
+  python -m benchmarks.check_regression --baseline /tmp/baseline \
+      --fresh . BENCH_serve.json [BENCH_*.json ...]
+
+Missing baseline files skip with a note (first run of a new benchmark);
+missing *fresh* files fail (the benchmark stopped emitting its JSON).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+GATE_KEY = "tok_s"          # throughput leaves gate; everything else informs
+
+
+def _walk(node, prefix=""):
+    """Flatten nested dicts to {dotted.path: numeric_leaf}."""
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(_walk(v, f"{prefix}.{k}" if prefix else k))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix] = float(node)
+    return out
+
+
+def compare(baseline: dict, fresh: dict, threshold: float):
+    """Returns (failures, checked) over the gating throughput leaves."""
+    base_leaves = _walk(baseline)
+    fresh_leaves = _walk(fresh)
+    failures, checked = [], []
+    for path, old in sorted(base_leaves.items()):
+        if GATE_KEY not in path or old <= 0:
+            continue
+        new = fresh_leaves.get(path)
+        if new is None:
+            failures.append((path, old, None, "leaf disappeared"))
+            continue
+        ratio = new / old
+        checked.append((path, old, new, ratio))
+        if ratio < 1.0 - threshold:
+            failures.append((path, old, new,
+                             f"{100 * (1 - ratio):.1f}% regression"))
+    return failures, checked
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", help="BENCH_*.json file names")
+    ap.add_argument("--baseline", default=".",
+                    help="directory holding the committed snapshots")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the freshly generated files")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional throughput drop")
+    args = ap.parse_args(argv)
+
+    any_fail = False
+    for name in args.files:
+        base_p = Path(args.baseline) / name
+        fresh_p = Path(args.fresh) / name
+        if not base_p.exists():
+            print(f"[skip] {name}: no committed baseline yet")
+            continue
+        if not fresh_p.exists():
+            print(f"[FAIL] {name}: benchmark did not emit a fresh copy")
+            any_fail = True
+            continue
+        baseline = json.loads(base_p.read_text())
+        fresh = json.loads(fresh_p.read_text())
+        failures, checked = compare(baseline, fresh, args.threshold)
+        for path, old, new, ratio in checked:
+            print(f"[ok]   {name}:{path} {old:.1f} -> {new:.1f} "
+                  f"({100 * ratio:.0f}%)")
+        for path, old, new, why in failures:
+            new_s = f"{new:.1f}" if new is not None else "missing"
+            print(f"[FAIL] {name}:{path} {old:.1f} -> {new_s} ({why})")
+        if not checked and not failures:
+            print(f"[skip] {name}: no '{GATE_KEY}' leaves to gate on")
+        any_fail |= bool(failures)
+    return 1 if any_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

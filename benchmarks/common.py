@@ -1,10 +1,14 @@
 """Shared benchmark utilities: wall timing, HLO op counting (the
-"instruction count" analogue of the paper's control-overhead analysis), and
-CSV emission in the required ``name,us_per_call,derived`` format."""
+"instruction count" analogue of the paper's control-overhead analysis),
+CSV emission in the required ``name,us_per_call,derived`` format, and
+machine-readable ``BENCH_<name>.json`` persistence (the CI
+bench-regression job diffs these against the committed copies)."""
 from __future__ import annotations
 
+import json
 import re
 import time
+from pathlib import Path
 from typing import Callable
 
 import jax
@@ -43,3 +47,19 @@ def hlo_counts(fn: Callable, *args) -> dict:
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(name: str, payload: dict, config: dict | None = None) -> Path:
+    """Persist a benchmark's structured results as ``BENCH_<name>.json`` at
+    the repo root and print the usual CSV row pointing at the file. Keys
+    containing ``tok_s`` are treated as throughputs by
+    ``benchmarks.check_regression`` — a fresh run more than 25% below the
+    committed copy fails CI."""
+    out = {"bench": name}
+    if config is not None:
+        out["config"] = config
+    out.update(payload)
+    path = Path(__file__).resolve().parents[1] / f"BENCH_{name}.json"
+    path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    emit(f"{name}_json", 0.0, path.name)
+    return path

@@ -32,9 +32,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.compat import optimization_barrier, shard_map
+from repro.compat import optimization_barrier
 from repro.core import queues
 from repro.core.topology import Topology, ring
+from repro.obs import linkstats
 
 # ---------------------------------------------------------------------------
 # shard_map-local primitives
@@ -59,6 +60,7 @@ def ring_ag_matmul(x_local, ws: Sequence[jax.Array], topo: Topology,
     if mode == "baseline":
         xs = jax.lax.all_gather(x_local, topo.axis, axis=x_local.ndim - 2,
                                 tiled=True)
+        linkstats.record_multicast(x_local, fan_in=n)
         return [jnp.einsum("...sd,df->...sf", xs, w) for w in ws]
 
     my = jax.lax.axis_index(topo.axis)
@@ -116,8 +118,10 @@ def ring_matmul_rs(x, w, topo: Topology, mode: str = "qlr"):
     s_local = s // n
     if mode == "baseline":
         y = jnp.einsum("...sf,fd->...sd", x, w)
-        return jax.lax.psum_scatter(y, topo.axis, scatter_dimension=y.ndim - 2,
-                                    tiled=True)
+        y_s = jax.lax.psum_scatter(y, topo.axis,
+                                   scatter_dimension=y.ndim - 2, tiled=True)
+        linkstats.record_multicast(y_s, fan_in=n)   # n partials per chunk
+        return y_s
 
     my = jax.lax.axis_index(topo.axis)
 
@@ -176,7 +180,10 @@ def _masked_rot(x, topo: Topology, times, n: int):
     def body(i, v):
         moved = queues.hop(topo, v, "qlr")
         return jnp.where(i < times, moved, v)
-    return jax.lax.fori_loop(0, n - 1, body, x)
+    with linkstats.mute():                # loop body must not leak tracers
+        out = jax.lax.fori_loop(0, n - 1, body, x)
+    linkstats.record_hops(x, n - 1)       # the skew always runs n-1 hops
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -244,10 +251,8 @@ def systolic_qkv(x, wq, wk, wv, mesh: Mesh, mode: str = "qlr"):
             return y2.reshape(b_, s_, w_l.shape[1], w_l.shape[2])
         return unflat(q2, wq_l), unflat(k2, wk_l), unflat(v2, wv_l)
 
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(x_spec, *w_specs), out_specs=out_specs,
-                   check_vma=False)
-    return fn(x, wq, wk, wv)
+    return linkstats.shard_call(body, mesh, (x_spec, *w_specs), out_specs,
+                                x, wq, wk, wv)
 
 
 def systolic_out_proj(attn_out, wo, mesh: Mesh, mode: str = "qlr"):
@@ -273,9 +278,8 @@ def systolic_out_proj(attn_out, wo, mesh: Mesh, mode: str = "qlr"):
         w2 = wo_l.reshape(hl * hd, wo_l.shape[2])
         return ring_matmul_rs(o2, w2, topo, mode)
 
-    fn = shard_map(body, mesh=mesh, in_specs=(x_spec, w_spec),
-                   out_specs=out_spec, check_vma=False)
-    return fn(attn_out, wo)
+    return linkstats.shard_call(body, mesh, (x_spec, w_spec), out_spec,
+                                attn_out, wo)
 
 
 def systolic_ffn(x, w_gate, w_up, w_down, mesh: Mesh, mode: str = "qlr"):
@@ -309,10 +313,6 @@ def systolic_ffn(x, w_gate, w_up, w_down, mesh: Mesh, mode: str = "qlr"):
         h = jax.nn.silu(gate) * up                    # [B_l, S, f_local]
         return ring_matmul_rs(h, wd, topo, mode)      # [B_l, s_local, d]
 
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(x_spec, wg_spec, wg_spec, wd_spec),
-        out_specs=out_spec,
-        check_vma=False,
-    )
-    return fn(x, w_gate, w_up, w_down)
+    return linkstats.shard_call(
+        body, mesh, (x_spec, wg_spec, wg_spec, wd_spec), out_spec,
+        x, w_gate, w_up, w_down)

@@ -37,6 +37,13 @@ Two opt-in facilities address that:
   ``[tag_error, checksum_error]``. Stuck/late links (stale, slow) freeze
   the whole message and trip the *tag* check; data-word faults (corrupt,
   drop) touch only the payload FIFOs and trip the *checksum* check.
+
+Telemetry (DESIGN.md §8): when a :mod:`repro.obs.linkstats` scope is
+armed, every hop additionally accumulates per-PE queue-traffic counters
+(push/pop counts, payload bytes, checked-link error totals) into it. No
+scope armed = nothing compiled in; the stream drivers mute the scope
+around their ``lax.scan`` and record the whole circuit afterwards, so
+telemetry never perturbs the scanned computation.
 """
 from __future__ import annotations
 
@@ -49,6 +56,7 @@ import jax.numpy as jnp
 from repro.compat import optimization_barrier
 from repro.core import faults
 from repro.core.topology import Topology
+from repro.obs import linkstats
 
 MODES = ("sw", "xqueue", "qlr")
 
@@ -68,12 +76,15 @@ def hop(topo: Topology, x, mode: str = "qlr", *, t=None, prev=None,
     ``(popped, health)`` where health is int32[2] = (tag_err, csum_err).
     """
     if checked:
-        return _checked_hop(topo, x, mode, t=t, prev=prev)
+        payload, health = _checked_hop(topo, x, mode, t=t, prev=prev)
+        linkstats.record_hops(x, 1, health=health)
+        return payload, health
     moved = _raw_hop(topo, x, mode)
     vec = faults.active_vec()
     if vec is not None and t is not None:
         my = jax.lax.axis_index(topo.axis)
         moved = faults.apply(vec, moved, x if prev is None else prev, t, my)
+    linkstats.record_hops(x, 1)
     return moved
 
 
@@ -207,9 +218,11 @@ def stream(topo: Topology, x0, n_steps: int,
             return (nxt, state), health
         return (nxt, state), None
 
-    (buf, state), health = jax.lax.scan(
-        body, (x0, state0), jnp.arange(n_steps),
-        unroll=n_steps if unroll else 1)
+    with linkstats.mute():                     # no tracer leaks from the scan
+        (buf, state), health = jax.lax.scan(
+            body, (x0, state0), jnp.arange(n_steps),
+            unroll=n_steps if unroll else 1)
+    linkstats.record_hops(x0, n_steps, health=health if checked else None)
     if checked:
         return state, buf, health
     return state, buf
@@ -261,9 +274,15 @@ def stream_carry(topo: Topology, static0, carry0, n_steps: int,
             return (nxt_static, nxt_carry), h_static + h_carry
         return (nxt_static, nxt_carry), None
 
-    (static, carry), health = jax.lax.scan(
-        body, (static0, carry0), jnp.arange(n_steps),
-        unroll=n_steps if unroll else 1)
+    with linkstats.mute():                     # no tracer leaks from the scan
+        (static, carry), health = jax.lax.scan(
+            body, (static0, carry0), jnp.arange(n_steps),
+            unroll=n_steps if unroll else 1)
+    # two queue sets ride each hop; the summed health attaches to one
+    # record so the error totals aren't double-counted
+    linkstats.record_hops(static0, n_steps,
+                          health=health if checked else None)
+    linkstats.record_hops(carry0, n_steps)
     if checked:
         return static, carry, health
     return static, carry
@@ -272,7 +291,9 @@ def stream_carry(topo: Topology, static0, carry0, n_steps: int,
 def multicast(x, axis: str):
     """Shared-memory multicast: every device reads the same operand
     (all-gather). The paper's concurrent-load collective."""
-    return jax.lax.all_gather(x, axis, axis=0, tiled=False)
+    out = jax.lax.all_gather(x, axis, axis=0, tiled=False)
+    linkstats.record_multicast(x, fan_in=jax.lax.psum(1, axis))
+    return out
 
 
 def gather_store(x, axis: str):

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.obs import linkstats
 from repro.core import queues
 from repro.core.collective_matmul import _batch_axes, _source_table
 from repro.core.topology import Topology, ring
@@ -112,6 +112,7 @@ def ring_attention(q_local, k_local, v_local, topo: Topology,
         # shared-memory multicast: every PE reads the full K/V
         ks = jax.lax.all_gather(k_local, topo.axis, axis=1, tiled=True)
         vs = jax.lax.all_gather(v_local, topo.axis, axis=1, tiled=True)
+        linkstats.record_multicast((k_local, v_local), fan_in=n)
         m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, h, sq), jnp.float32)
         acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
@@ -177,9 +178,8 @@ def systolic_ring_attention(q, k, v, mesh: Mesh, mode: str = "qlr", *,
         return ring_attention(q_l, k_l, v_l, topo, mode, causal=causal,
                               window=window)
 
-    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
-                   out_specs=spec, check_vma=False)
-    return fn(q, k, v)
+    return linkstats.shard_call(body, mesh, (spec, spec, spec), spec,
+                                q, k, v)
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +240,7 @@ def ring_decode_attention(q_local, k_all, v_all, pos_all, topo: Topology,
         # dense pass for its own query slice
         ks = jax.lax.all_gather(k_all, topo.axis, axis=1, tiled=True)
         vs = jax.lax.all_gather(v_all, topo.axis, axis=1, tiled=True)
+        linkstats.record_multicast((k_all, v_all), fan_in=n)
         k_my = jax.lax.dynamic_slice_in_dim(ks, my * b_loc, b_loc, 0)
         v_my = jax.lax.dynamic_slice_in_dim(vs, my * b_loc, b_loc, 0)
         pos_my = jax.lax.dynamic_slice_in_dim(pos_all, my * b_loc, b_loc, 0)
@@ -312,7 +313,6 @@ def systolic_ring_decode(q, k_cache, v_cache, pos, mesh: Mesh,
     def body(q_l, k_l, v_l, pos_l):
         return ring_decode_attention(q_l, k_l, v_l, pos_l, topo, mode)
 
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(q_spec, kv_spec, kv_spec, pos_spec),
-                   out_specs=q_spec, check_vma=False)
-    return fn(q, k_cache, v_cache, pos)
+    return linkstats.shard_call(
+        body, mesh, (q_spec, kv_spec, kv_spec, pos_spec), q_spec,
+        q, k_cache, v_cache, pos)

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.obs import linkstats
 from repro.core import queues
 from repro.core.collective_matmul import _batch_axes, _source_table
 from repro.core.topology import Topology, ring
@@ -113,10 +113,12 @@ def ring_moe(x_blk, idx_blk, pos_blk, w_blk, wg, wu, wd, topo: Topology,
         xs = jax.lax.all_gather(x_blk, topo.axis, axis=1, tiled=True)
         idxs = jax.lax.all_gather(idx_blk, topo.axis, axis=1, tiled=True)
         poss = jax.lax.all_gather(pos_blk, topo.axis, axis=1, tiled=True)
+        linkstats.record_multicast((x_blk, idx_blk, pos_blk), fan_in=n)
         xbuf = scatter_block(xbuf0, xs, idxs, poss)
         out_e = _expert_ffn(xbuf, wg, wu, wd)
         # ... and every owner reads every expert's outputs
         outs = jax.lax.all_gather(out_e, topo.axis, axis=0, tiled=False)
+        linkstats.record_multicast(out_e, fan_in=n)
         y = jnp.zeros((b, s_l, d), jnp.float32)
         for src in range(n):
             y = y + gather_block(outs[src], src * e_l)
@@ -192,9 +194,7 @@ def systolic_ring_moe(x, idx, pos, weights, wg, wu, wd, cap: int,
         return ring_moe(x_l, idx_l, pos_l, w_l, wg_l, wu_l, wd_l, topo,
                         cap, mode)
 
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(tok_spec, tok_spec, tok_spec, tok_spec,
-                  w_spec, w_spec, w_spec),
-        out_specs=tok_spec, check_vma=False)
-    return fn(x, idx, pos, weights, wg, wu, wd)
+    return linkstats.shard_call(
+        body, mesh,
+        (tok_spec, tok_spec, tok_spec, tok_spec, w_spec, w_spec, w_spec),
+        tok_spec, x, idx, pos, weights, wg, wu, wd)

@@ -15,6 +15,13 @@ links plus a per-tick canary probe on the ring backend; --monitor guards
 every tick (snapshot/rollback, poisoned-request eviction, mode-ladder
 degradation); --deadline SECONDS adds a wall-clock budget per step;
 --eos-token retires a slot when it samples that token.
+
+Observability flags (DESIGN.md §8): --metrics-out FILE.json writes the
+metrics snapshot (a FILE.prom Prometheus text twin lands next to it);
+--trace-out FILE.json writes a Chrome trace of the engine's tick phases
+(load it in Perfetto or chrome://tracing); --telemetry arms link-traffic
+counters on the ring backend (queue push/pop, payload bytes, checked-link
+errors) folded into the metrics as repro_link_*.
 """
 from __future__ import annotations
 
@@ -66,6 +73,12 @@ def main(argv=None):
                     help="guard every tick with the health monitor")
     ap.add_argument("--deadline", type=float, default=0.0,
                     help="per-step wall-clock budget in seconds (0 = off)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write metrics snapshot JSON here (+ .prom twin)")
+    ap.add_argument("--trace-out", default="",
+                    help="write Chrome trace-event JSON here (Perfetto)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="arm link-traffic telemetry (ring only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -78,12 +91,18 @@ def main(argv=None):
     backend = None
     if args.backend == "ring":
         backend = RingShardedBackend(cfg, scfg, params, _make_mesh(args.mesh),
-                                     mode=args.mode, checked=args.checked)
+                                     mode=args.mode, checked=args.checked,
+                                     telemetry=args.telemetry)
     health = None
     if args.monitor or args.deadline > 0:
         from repro.serve.health import HealthConfig
         health = HealthConfig(deadline_s=args.deadline)
-    engine = ServeEngine(cfg, scfg, params, backend=backend, health=health)
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
+    engine = ServeEngine(cfg, scfg, params, backend=backend, health=health,
+                         tracer=tracer)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -108,6 +127,15 @@ def main(argv=None):
         print("health events:")
         for ev in engine.monitor.events:
             print(f"  tick={ev.tick} [{ev.kind}] mode={ev.mode}: {ev.detail}")
+
+    if args.metrics_out or args.trace_out:
+        prom = (args.metrics_out.rsplit(".", 1)[0] + ".prom"
+                if args.metrics_out else None)
+        engine.export_observability(
+            metrics_json=args.metrics_out or None, metrics_prom=prom,
+            trace_out=args.trace_out or None)
+        for p in filter(None, (args.metrics_out, prom, args.trace_out)):
+            print(f"wrote {p}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.obs import linkstats
 from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models.common import (
@@ -299,13 +300,13 @@ class TransformerLM:
             def dbody(x, lp):
                 y, kv = block_prefill(lp, x, cfg, moe_layer=False)
                 return y, kv
-            x, kvs = jax.lax.scan(dbody, x, params["dense_layers"])
+            x, kvs = linkstats.scan(dbody, x, params["dense_layers"])
             new_cache["dense_layers"] = write(cache["dense_layers"], kvs)
 
         def body(x, lp):
             y, kv = block_prefill(lp, x, cfg, moe_layer=self.moe)
             return y, kv
-        x, kvs = jax.lax.scan(body, x, params["layers"])
+        x, kvs = linkstats.scan(body, x, params["layers"])
         new_cache["layers"] = write(cache["layers"], kvs)
 
         x = apply_norm(params["final_norm"], x, cfg)
@@ -327,7 +328,7 @@ class TransformerLM:
                 y, c2 = block_decode(lp, x, c, cfg, moe_layer=False,
                                      active=active)
                 return y, c2
-            x, new_dense = jax.lax.scan(
+            x, new_dense = linkstats.scan(
                 dbody, x, (params["dense_layers"], cache["dense_layers"]))
             new_cache["dense_layers"] = new_dense
 
@@ -336,7 +337,8 @@ class TransformerLM:
             y, c2 = block_decode(lp, x, c, cfg, moe_layer=self.moe,
                                  active=active)
             return y, c2
-        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        x, new_layers = linkstats.scan(
+            body, x, (params["layers"], cache["layers"]))
         new_cache["layers"] = new_layers
 
         x = apply_norm(params["final_norm"], x, cfg)

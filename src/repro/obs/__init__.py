@@ -1,0 +1,13 @@
+"""Observability subsystem (DESIGN.md §8).
+
+Four layers, importable independently (this package init stays empty so
+``core.queues`` can import :mod:`repro.obs.linkstats` without dragging in
+the rest):
+
+  linkstats    — per-PE queue-traffic counters riding inside jit
+  utilization  — LinkStats + roofline FLOPs + energy models → per-mode
+                 compute-unit utilization % and modeled GOPS/W
+  trace        — host-side spans → Chrome trace-event JSON (Perfetto)
+  metrics      — counters / gauges / histograms registry → JSON +
+                 Prometheus text exposition
+"""

@@ -19,14 +19,26 @@ Each engine tick plans a fixed ``max_batch``-row token batch (each row is a
 slot with its own cache position; the ``active`` mask keeps idle slots'
 caches frozen), runs one backend step, samples, and commits. The decode
 dry-run cells lower exactly this step function at production size.
+
+Observability (DESIGN.md §8): the engine owns a metrics
+:class:`~repro.obs.metrics.Registry` (tokens, ticks, tick-latency
+histogram, plus the scheduler's request-lifecycle counters and the health
+monitor's rollback/degrade counters) and an optional
+:class:`~repro.obs.trace.Tracer` that spans each tick's phases
+(prefill / decode / sample; the monitor adds probe / rollback / degrade /
+evict marks). Pass ``tracer=None`` for the zero-cost null tracer.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 import jax
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import NullTracer, Tracer
 from repro.serve.sample import sample
 from repro.serve.scheduler import Request, Scheduler  # noqa: F401 (re-export)
 from repro.serve.sharded_cache import DecodeBackend
@@ -43,16 +55,24 @@ class TicksExhaustedError(RuntimeError):
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
-                 backend: DecodeBackend | None = None, health=None):
+                 backend: DecodeBackend | None = None, health=None,
+                 metrics: obs_metrics.Registry | None = None,
+                 tracer: Tracer | None = None):
         self.cfg = cfg
         self.scfg = scfg
         self._params = params                  # kept for backend rebuilds
+        self.metrics = metrics if metrics is not None \
+            else obs_metrics.Registry()
+        self.tracer = tracer if tracer is not None else NullTracer()
         self.backend = backend if backend is not None \
             else DecodeBackend(cfg, scfg, params)
+        self.backend.tracer = self.tracer
         self.sched = Scheduler(scfg.max_batch, scfg.max_seq_len,
                                bos_token=scfg.bos_token,
-                               eos_token=scfg.eos_token)
+                               eos_token=scfg.eos_token,
+                               metrics=self.metrics)
         self.key = jax.random.PRNGKey(scfg.seed)
+        self._tick = 0
         self.monitor = None
         if health is not None:
             from repro.serve.health import HealthMonitor
@@ -96,23 +116,59 @@ class ServeEngine:
             self.backend.free_slot(slot)
             n_block = self.backend.prefill_len(len(req.prompt))
             if n_block > 0:
-                self.backend.prefill(slot, req.prompt[:n_block])
+                with self.tracer.span("prefill", cat="serve",
+                                      args={"slot": slot, "rid": req.rid,
+                                            "tokens": n_block}), \
+                        self.metrics.histogram(
+                            "repro_prefill_latency_seconds",
+                            "block-prefill wall time").time():
+                    self.backend.prefill(slot, req.prompt[:n_block])
                 self.sched.note_prefilled(slot, n_block)
+                self.metrics.counter(
+                    "repro_prefill_tokens_total",
+                    "prompt tokens absorbed by block prefill").inc(n_block)
 
     def _sample_and_commit(self, logits, sampling):
-        self.key, sub = jax.random.split(self.key)
-        next_tok = np.asarray(sample(logits, sub, self.scfg.temperature,
-                                     self.scfg.top_k))
-        self.sched.commit(sampling, next_tok)
+        with self.tracer.span("sample", cat="serve"):
+            self.key, sub = jax.random.split(self.key)
+            next_tok = np.asarray(sample(logits, sub, self.scfg.temperature,
+                                         self.scfg.top_k))
+            self.sched.commit(sampling, next_tok)
+        self.metrics.counter("repro_tokens_total",
+                             "tokens sampled and committed").inc(
+            int(np.sum(sampling)))
 
     def step(self):
         """One engine tick = one backend decode step for all slots (under
         the health monitor's guard when one is configured)."""
-        if self.monitor is not None:
-            return self.monitor.guarded_step()
-        tokens, active, sampling = self.sched.plan()
-        logits = self.backend.step(tokens, active)
-        self._sample_and_commit(logits, sampling)
+        self._tick += 1
+        self.metrics.counter("repro_ticks_total", "engine ticks run").inc()
+        with self.tracer.span("tick", cat="serve",
+                              args={"tick": self._tick}), \
+                self.metrics.histogram("repro_tick_latency_seconds",
+                                       "whole-tick wall time").time():
+            if self.monitor is not None:
+                return self.monitor.guarded_step()
+            tokens, active, sampling = self.sched.plan()
+            with self.tracer.span("decode", cat="serve"):
+                logits = self.backend.step(tokens, active)
+            self._sample_and_commit(logits, sampling)
+
+    def export_observability(self, metrics_json=None, metrics_prom=None,
+                             trace_out=None) -> None:
+        """Write metrics (JSON and/or Prometheus text) and the Chrome
+        trace. Folds the backend's link telemetry into the registry as
+        ``repro_link_*`` counters first, so snapshots are self-contained."""
+        for k, v in self.backend.link_stats().items():
+            c = self.metrics.counter(f"repro_link_{k}_total",
+                                     "queue telemetry (LinkStats)")
+            c.value = float(v)                 # totals, not deltas
+        if metrics_json:
+            self.metrics.dump_json(metrics_json)
+        if metrics_prom:
+            self.metrics.dump_prometheus(metrics_prom)
+        if trace_out:
+            self.tracer.dump(trace_out)
 
     def run(self, max_ticks: int = 10_000) -> int:
         """Drive until all submitted requests complete. Returns #ticks.
@@ -122,10 +178,18 @@ class ServeEngine:
         :class:`TicksExhaustedError` is raised — a stuck engine must never
         silently drop requests as if they had been served."""
         ticks = 0
+        t0 = time.perf_counter()
+        tok0 = self.metrics.counter("repro_tokens_total").value
         while self.sched.busy and ticks < max_ticks:
             self._admit()
             self.step()
             ticks += 1
+        elapsed = time.perf_counter() - t0
+        done_toks = self.metrics.counter("repro_tokens_total").value - tok0
+        self.metrics.gauge(
+            "repro_tokens_per_second",
+            "committed tokens / wall time of the last run()").set(
+            done_toks / elapsed if elapsed > 0 else 0.0)
         if self.sched.busy:
             failed = self.sched.fail_all(f"max_ticks={max_ticks} exhausted")
             raise TicksExhaustedError(

@@ -78,15 +78,26 @@ class HealthMonitor:
         self.hcfg = hcfg or HealthConfig()
         self.events: list[HealthEvent] = []
         self.tick = 0
+        self._sync_rung_gauge()
 
     # ------------------------------------------------------------- ladder
     def _rung(self) -> str:
         b = self.eng.backend
         return b.mode if isinstance(b, RingShardedBackend) else "dense"
 
+    def _sync_rung_gauge(self) -> None:
+        self.eng.metrics.gauge(
+            "repro_mode_rung",
+            "ladder position, 0=qlr .. 4=dense").set(
+            MODE_LADDER.index(self._rung()))
+
     def _note(self, kind: str, detail: str) -> None:
         self.events.append(
             HealthEvent(self.tick, kind, detail, self.eng.backend.name))
+        self.eng.tracer.instant(kind, cat="serve",
+                                args={"tick": self.tick, "detail": detail})
+        self.eng.metrics.counter(f"repro_health_{kind}_total",
+                                 f"health events of kind {kind}").inc()
 
     def _degrade(self, snap_cache) -> bool:
         """Rebuild the backend one rung down the ladder on the snapshotted
@@ -101,10 +112,17 @@ class HealthMonitor:
         else:
             new = RingShardedBackend(
                 eng.cfg, eng.scfg, eng._params, old.mesh, mode=nxt,
-                param_axes=old.param_axes, checked=True)
+                param_axes=old.param_axes, checked=True,
+                telemetry=getattr(old, "telemetry", False))
         new.adopt_cache(snap_cache)
+        if hasattr(old, "_stats_total") and hasattr(new, "_stats_total"):
+            new._stats_total = dict(old._stats_total)   # telemetry survives
         self._note("degrade", f"{old.name} -> {new.name}")
+        eng.metrics.counter("repro_degradations_total",
+                            "mode-ladder rungs stepped down").inc()
+        new.tracer = eng.tracer
         eng.backend = new
+        self._sync_rung_gauge()
         return True
 
     def force_degrade(self) -> str:
@@ -131,8 +149,9 @@ class HealthMonitor:
         for _ in range(hcfg.max_retries + 1):
             tokens, active, sampling = eng.sched.plan()
             t0 = time.perf_counter()
-            logits = eng.backend.step(tokens, active)
-            jax.block_until_ready(logits)
+            with eng.tracer.span("decode", cat="serve"):
+                logits = eng.backend.step(tokens, active)
+                jax.block_until_ready(logits)
             elapsed = time.perf_counter() - t0
 
             health = eng.backend.link_health()
@@ -146,6 +165,10 @@ class HealthMonitor:
                        else f"step took {elapsed:.3f}s > "
                             f"deadline {hcfg.deadline_s:.3f}s")
                 self._note("link_fault" if link_bad else "deadline", why)
+                eng.tracer.instant("rollback", cat="serve",
+                                   args={"tick": self.tick, "why": why})
+                eng.metrics.counter("repro_rollbacks_total",
+                                    "ticks rolled back and retried").inc()
                 eng.sched.restore(snap_sched)
                 if not self._degrade(snap_cache):
                     self._fatal(f"mode ladder exhausted after {why}")
@@ -158,6 +181,8 @@ class HealthMonitor:
             if bad_rows.any():
                 # numeric poisoning with healthy links: indict the rows,
                 # not the transport — evict them and keep the rung
+                eng.metrics.counter("repro_rollbacks_total",
+                                    "ticks rolled back and retried").inc()
                 eng.sched.restore(snap_sched)
                 eng.backend.adopt_cache(snap_cache)
                 for slot in np.nonzero(bad_rows)[0]:

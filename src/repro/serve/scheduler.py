@@ -26,6 +26,11 @@ non-finite logits, serve/health.py) and ``failed`` means the engine gave
 up on it (tick budget exhausted, unrecoverable fault). The health monitor
 relies on :meth:`Scheduler.snapshot`/:meth:`Scheduler.restore` to roll a
 planned-but-unhealthy tick back as if it never happened.
+
+Optionally takes an :class:`repro.obs.metrics.Registry` (also jax-free)
+and keeps the request-lifecycle counters/gauges current:
+``repro_requests_{submitted,done,error,failed}_total``,
+``repro_evictions_total``, ``repro_active_slots``, ``repro_pending_requests``.
 """
 from __future__ import annotations
 
@@ -33,6 +38,8 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
 
 STATUS_QUEUED = "queued"
 STATUS_RUNNING = "running"
@@ -58,16 +65,27 @@ class Scheduler:
     """Slot bookkeeping for a fixed decode batch of ``max_batch`` rows."""
 
     def __init__(self, max_batch: int, max_seq_len: int, bos_token: int = 0,
-                 eos_token: int = -1):
+                 eos_token: int = -1,
+                 metrics: "obs_metrics.Registry | None" = None):
         self.max_batch = max_batch
         self.max_seq = max_seq_len
         self.bos_token = bos_token
         self.eos_token = eos_token        # < 0 disables EOS-based stopping
+        self.metrics = metrics if metrics is not None \
+            else obs_metrics.Registry()
         self._next_rid = 0
         self.pending: list[Request] = []
         self.slot_req: list[Optional[Request]] = [None] * max_batch
         self.slot_prompt_left = np.zeros(max_batch, np.int64)
         self.slot_new_left = np.zeros(max_batch, np.int64)
+
+    def _sync_gauges(self) -> None:
+        self.metrics.gauge(
+            "repro_active_slots", "slots with a running request").set(
+            sum(r is not None for r in self.slot_req))
+        self.metrics.gauge(
+            "repro_pending_requests", "queued, not yet admitted").set(
+            len(self.pending))
 
     # ------------------------------------------------------------- client
     def submit(self, prompt, max_new_tokens: int = 16) -> Request:
@@ -89,6 +107,9 @@ class Scheduler:
                       min(max_new_tokens, budget), truncated=truncated)
         self._next_rid += 1
         self.pending.append(req)
+        self.metrics.counter("repro_requests_submitted_total",
+                             "requests accepted by submit()").inc()
+        self._sync_gauges()
         return req
 
     @property
@@ -111,6 +132,8 @@ class Scheduler:
             self.slot_prompt_left[slot] = len(req.prompt)
             self.slot_new_left[slot] = req.max_new_tokens
             admitted.append((slot, req))
+        if admitted:
+            self._sync_gauges()
         return admitted
 
     def note_prefilled(self, slot: int, n_tokens: int) -> None:
@@ -175,6 +198,9 @@ class Scheduler:
         self.slot_req[slot] = None
         self.slot_prompt_left[slot] = 0
         self.slot_new_left[slot] = 0
+        self.metrics.counter("repro_requests_done_total",
+                             "requests finished successfully").inc()
+        self._sync_gauges()
 
     # ------------------------------------------------------ fault surface
     def evict(self, slot: int, status: str = STATUS_ERROR,
@@ -191,6 +217,11 @@ class Scheduler:
         self.slot_req[slot] = None
         self.slot_prompt_left[slot] = 0
         self.slot_new_left[slot] = 0
+        self.metrics.counter("repro_evictions_total",
+                             "running requests terminally evicted").inc()
+        self.metrics.counter(f"repro_requests_{status}_total",
+                             f"requests ending in status {status}").inc()
+        self._sync_gauges()
         return req
 
     def fail_all(self, reason: str) -> list[Request]:
@@ -205,7 +236,10 @@ class Scheduler:
             req.status = STATUS_FAILED
             req.finish_reason = reason
             failed.append(req)
+            self.metrics.counter("repro_requests_failed_total",
+                                 "requests ending in status failed").inc()
         self.pending.clear()
+        self._sync_gauges()
         return failed
 
     def snapshot(self) -> dict:

@@ -33,9 +33,16 @@ Robustness surface (serve/health.py rides on it):
 * ``adopt_cache`` moves a cache snapshot onto this backend's placement —
   how the health monitor migrates serving state one rung down the mode
   ladder without losing a token.
+
+Telemetry surface (DESIGN.md §8): ``RingShardedBackend(...,
+telemetry=True)`` compiles the step/prefill with a
+:mod:`repro.obs.linkstats` scope armed and a 0/1 enable scalar as a jit
+*argument* — ``set_telemetry`` flips collection at run time with zero
+retrace; ``link_stats()`` returns the accumulated queue-traffic totals.
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import replace
 
 import numpy as np
@@ -47,6 +54,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import faults, queues
+from repro.obs import linkstats
 from repro.core.topology import ring
 from repro.models import build_model
 from repro.models.common import use_sharding
@@ -64,6 +72,8 @@ class DecodeBackend:
     name = "dense"
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+        from repro.obs.trace import NullTracer
+        self.tracer = NullTracer()        # engine swaps in its own
         self.cfg = cfg
         self.scfg = scfg
         self.model = build_model(cfg)
@@ -128,6 +138,14 @@ class DecodeBackend:
         backends without systolic links)."""
         return {}
 
+    def link_stats(self) -> dict:
+        """Accumulated queue-traffic totals (empty for backends without
+        telemetry — the dense path has no links to count)."""
+        return {}
+
+    def set_telemetry(self, on: bool) -> None:
+        """Toggle link telemetry collection (no-op without links)."""
+
     @property
     def supports_prefill(self) -> bool:
         return (self.scfg.prefill_chunk > 0
@@ -166,11 +184,14 @@ class RingShardedBackend(DecodeBackend):
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
                  mesh: Mesh, mode: str = "qlr", param_axes=None,
-                 checked: bool = False):
+                 checked: bool = False, telemetry: bool = False):
         self.mesh = mesh
         self.mode = mode
         self.param_axes = param_axes
         self.checked = checked
+        self.telemetry = telemetry
+        self.telemetry_on = telemetry
+        self._stats_total: dict = {}
         self.name = f"ring-{mode}" + ("+checked" if checked else "")
         self.last_health: dict = {}
         cfg = replace(cfg, systolic_mode=mode)
@@ -195,39 +216,79 @@ class RingShardedBackend(DecodeBackend):
 
     def _make_step(self):
         model, mesh = self.model, self.mesh
-        if not self.checked:
+        checked, telemetry = self.checked, self.telemetry
+        if not checked and not telemetry:
             def step(params, cache, tokens, active):
                 with use_sharding(mesh, rules=RING_SERVE_RULES):
                     return model.decode_step(params, cache, tokens, active)
             return step
 
-        def checked_step(params, cache, tokens, active, fault_vec):
-            # the fault spec is a *function input*: arming a fault for a
-            # chaos window (or disarming it after recovery) reuses the
-            # same compiled step
-            with faults.scope(fault_vec), \
-                    use_sharding(mesh, rules=RING_SERVE_RULES):
-                return model.decode_step(params, cache, tokens, active)
-        return checked_step
+        def step(params, cache, tokens, active, *extra):
+            # fault spec and telemetry enable are *function inputs*:
+            # arming a fault for a chaos window, disarming it after
+            # recovery, or toggling telemetry reuses the same compiled
+            # step
+            i = 0
+            with contextlib.ExitStack() as st:
+                if checked:
+                    st.enter_context(faults.scope(extra[i])); i += 1
+                sc = st.enter_context(linkstats.collect(extra[i])) \
+                    if telemetry else None
+                st.enter_context(use_sharding(mesh, rules=RING_SERVE_RULES))
+                out = model.decode_step(params, cache, tokens, active)
+            return (out, sc.stats) if telemetry else out
+        return step
+
+    def _step_extra(self, vec):
+        extra = []
+        if self.checked:
+            extra.append(vec)
+        if self.telemetry:
+            extra.append(jnp.int32(1 if self.telemetry_on else 0))
+        return extra
 
     def step(self, tokens: np.ndarray, active: np.ndarray):
-        if not self.checked:
+        if not self.checked and not self.telemetry:
             return super().step(tokens, active)
-        vec = faults.injected_vec()
-        logits, self.cache = self._step(
+        vec = faults.injected_vec() if self.checked else None
+        out = self._step(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(active), vec)
-        self.last_health = self._probe_links(vec)
+            jnp.asarray(active), *self._step_extra(vec))
+        if self.telemetry:
+            (logits, self.cache), stats = out
+            self._accumulate(stats)
+        else:
+            logits, self.cache = out
+        if self.checked:
+            with self.tracer.span("probe", cat="serve"):
+                self.last_health = self._probe_links(vec)
         return logits
 
     def _make_prefill(self):
         model, mesh = self.model, self.mesh
+        telemetry = self.telemetry
 
-        def prefill(params, cache, tokens, row, length):
-            with use_sharding(mesh, rules=RING_SERVE_RULES):
-                return model.prefill_into_cache(params, cache, tokens, row,
-                                                length)
+        def prefill(params, cache, tokens, row, length, *extra):
+            with contextlib.ExitStack() as st:
+                sc = st.enter_context(linkstats.collect(extra[0])) \
+                    if telemetry else None
+                st.enter_context(use_sharding(mesh, rules=RING_SERVE_RULES))
+                out = model.prefill_into_cache(params, cache, tokens, row,
+                                               length)
+            return (out, sc.stats) if telemetry else out
         return prefill
+
+    def prefill(self, slot: int, prompt: np.ndarray) -> None:
+        if not self.telemetry:
+            return super().prefill(slot, prompt)
+        chunk = min(self.scfg.prefill_chunk, self.max_seq)
+        buf = np.zeros(chunk, np.int32)
+        buf[:len(prompt)] = prompt
+        (_, self.cache), stats = self._prefill(
+            self.params, self.cache, jnp.asarray(buf),
+            jnp.int32(slot), jnp.int32(len(prompt)),
+            jnp.int32(1 if self.telemetry_on else 0))
+        self._accumulate(stats)
 
     # --------------------------------------------------------- robustness
     def _make_probe(self):
@@ -262,6 +323,19 @@ class RingShardedBackend(DecodeBackend):
 
     def link_health(self) -> dict:
         return dict(self.last_health)
+
+    # ---------------------------------------------------------- telemetry
+    def _accumulate(self, stats) -> None:
+        for k, v in stats.as_dict().items():
+            self._stats_total[k] = self._stats_total.get(k, 0) + v
+
+    def link_stats(self) -> dict:
+        return dict(self._stats_total)
+
+    def set_telemetry(self, on: bool) -> None:
+        """Flip run-time collection; requires telemetry=True at build (the
+        enable rides as a step argument, so this never retraces)."""
+        self.telemetry_on = bool(on) and self.telemetry
 
     def adopt_cache(self, cache) -> None:
         sh = jax.tree_util.tree_map(lambda l: l.sharding, self.cache)

@@ -117,6 +117,23 @@ def test_fault_recovery_multidev():
     assert results["post_recovery_serves"]["ok"]
 
 
+def test_obs_multidev():
+    """Link telemetry on the ring backend: bitwise parity with telemetry
+    off, real per-rung traffic counts (queue payload for qlr, multicast
+    for baseline), the zero-retrace run-time toggle, and the engine's
+    repro_link_* metric export + Chrome trace."""
+    results = run_check("check_obs.py")
+    assert results["telemetry_parity"]["ok"]
+    assert results["qlr_counts"]["ok"]
+    assert results["baseline_rung_silent"]["ok"]
+    assert results["baseline_schedule_mcast"]["ok"]
+    assert results["qlr_schedule_counts"]["ok"]
+    assert results["toggle_freezes_totals"]["ok"]
+    assert results["toggle_resumes"]["ok"]
+    assert results["engine_link_counters"]["ok"]
+    assert results["engine_trace_spans"]["ok"]
+
+
 def test_ring_decode_multidev():
     """Ring-sharded KV decode: the decode core matches dense masked
     attention numerically, and a ring-sharded ServeEngine produces the

@@ -20,6 +20,8 @@ energy. Reproduces the 27% -> ~63% utilization ladder and the
 """
 from __future__ import annotations
 
+from functools import partial
+
 import numpy as np
 
 import jax
@@ -44,7 +46,7 @@ def analytic_utilization(macs: int, queue_ops: int, loads: int,
     return macs / max(macs + queue_ops + loads, 1)
 
 
-def _cannon(mesh, rows, cols, m, n, k, mode="qlr"):
+def _cannon(mesh, rows, cols, m, n, k, mode="qlr", use_kernel=False):
     rt = torus_shift("pe", rows, cols, direction="right")
     ct = torus_shift("pe", rows, cols, direction="down")
     left = Topology("left", "pe", rows * cols,
@@ -52,7 +54,8 @@ def _cannon(mesh, rows, cols, m, n, k, mode="qlr"):
     up = Topology("up", "pe", rows * cols, tuple((d, s) for s, d in ct.perm))
 
     def body(al, bl):
-        return cannon_matmul(al[0], bl[0], left, up, rows, cols, mode)[None]
+        return cannon_matmul(al[0], bl[0], left, up, rows, cols, mode,
+                             use_kernel=use_kernel)[None]
 
     fn = shard_map(body, mesh=mesh, in_specs=(P("pe"), P("pe")),
                        out_specs=P("pe"), check_vma=False)
@@ -110,6 +113,17 @@ def run(n_dev: int = 16, base: int = 128):
                       "paper_util_measured": paper_util,
                       "modeled_gops_w": round(rep.gops_per_w, 1),
                       "queue_ops": queue_ops}
+        # kernel twin: the local MAC as the Pallas tile kernel with the
+        # traveling accumulator carried in (interpret mode off-TPU)
+        kfn, _ = _cannon(mesh, grid, grid, m, n, k, use_kernel=True)
+        jkfn = jax.jit(kfn)
+        kerr = float(jnp.abs(jkfn(a_t, b_t) - jfn(a_t, b_t)).max())
+        assert kerr < 1e-3, (name, kerr)
+        kus = time_fn(jkfn, a_t, b_t)
+        emit(f"{name}_kernel", kus, f"err_vs_jnp={kerr:.1e};jnp_us={us:.1f}")
+        rows[f"{name}_kernel"] = {"us_per_call": round(kus, 1),
+                                  "err_vs_jnp": kerr,
+                                  "jnp_us_per_call": round(us, 1)}
 
     # --- v5..v8: hybrid ring AG-matmul (A streamed, B resident) ----------
     m, k, n = 512, 256, 256
@@ -123,12 +137,17 @@ def run(n_dev: int = 16, base: int = 128):
         "matmul_v8_8x32": ("qlr", snake_ring("pe", 2, n_dev // 2)),
     }
     for name, (mode, topo) in hybrid_variants.items():
-        def body(al, bl, mode=mode, topo=topo):
-            (out,) = ring_ag_matmul(al, [bl], topo, mode)
+        def body(al, bl, mode=mode, topo=topo, use_kernel=False):
+            (out,) = ring_ag_matmul(al, [bl], topo, mode,
+                                    use_kernel=use_kernel)
             return out
 
         fn = jax.jit(shard_map(
             body, mesh=mesh, in_specs=(P("pe", None), P(None, None)),
+            out_specs=P(None, None), check_vma=False))
+        kfn = jax.jit(shard_map(
+            partial(body, use_kernel=True), mesh=mesh,
+            in_specs=(P("pe", None), P(None, None)),
             out_specs=P(None, None), check_vma=False))
         # stream A's row blocks around the ring (the paper: A rows pushed
         # through the array); B resident (hybrid input load)
@@ -151,6 +170,14 @@ def run(n_dev: int = 16, base: int = 128):
                       "utilization": round(util, 4),
                       "modeled_gops_w": round(rep.gops_per_w, 1),
                       "mode": mode}
+        kerr = float(jnp.abs(kfn(a_s, b) - y).max())
+        assert kerr < 1e-3, (name, kerr)
+        kus = time_fn(kfn, a_s, b)
+        emit(f"{name}_kernel", kus, f"err_vs_jnp={kerr:.1e};jnp_us={us:.1f}")
+        rows[f"{name}_kernel"] = {"us_per_call": round(kus, 1),
+                                  "err_vs_jnp": kerr,
+                                  "jnp_us_per_call": round(us, 1),
+                                  "mode": mode}
     emit_json("matmul_variants", {"variants": rows},
               config={"n_devices": n_dev, "base": base})
     return results

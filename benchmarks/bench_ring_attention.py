@@ -89,6 +89,27 @@ def run(n_dev: int = 8, seq_lens=(512, 1024, 2048), b: int = 1,
                 "modeled_gops_w": round(rep.gops_per_w, 1),
                 "link_stats": stats,
             }
+            # kernel-vs-jnp twin: the same schedule with the per-hop consume
+            # fused into one Pallas launch (interpret mode off-TPU, so wall
+            # time here measures overhead, not the TPU win)
+            kfn = jax.jit(lambda q, k, v, m=mode: systolic_ring_attention(
+                q, k, v, mesh, m, causal=True, use_kernel=True))
+            yk = kfn(q, k, v)
+            kerr = float(jnp.abs(yk - y).max())
+            assert kerr <= 1e-5, (mode, s, kerr)
+            kus = time_fn(kfn, q, k, v)
+            kcounts = hlo_counts(kfn, q, k, v)
+            emit(f"ring_attn_{mode}_s{s}_kernel", kus,
+                 f"ops={kcounts['total_ops']};"
+                 f"colls={kcounts['n_collectives']};"
+                 f"err_vs_jnp={kerr:.1e};jnp_us={us:.1f}")
+            rows[f"{mode}_s{s}_kernel"] = {
+                "us_per_call": round(kus, 1),
+                "total_ops": kcounts["total_ops"],
+                "n_collectives": kcounts["n_collectives"],
+                "err_vs_jnp": kerr,
+                "jnp_us_per_call": round(us, 1),
+            }
         for line in utilization.table(reports).splitlines():
             print(f"# s={s} {line}")
 

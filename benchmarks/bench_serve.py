@@ -9,9 +9,11 @@ each phase, per backend:
   ring-baseline    KV ring-sharded, queries all-gathered (multicast ref)
   ring-sw/xqueue/qlr   queries streamed over the systolic links
 
-Block prefill (``prefill_chunk > 0``) is additionally measured for the
-dense and ring-qlr backends: the prompt head goes through one
-full-sequence forward instead of P-1 streamed ticks.
+Block prefill (``prefill_chunk > 0``) is additionally measured for every
+backend: the prompt head goes through one full-sequence forward instead
+of P-1 streamed ticks. Running it uniformly keeps the BENCH_serve.json
+leaf set identical across backends, so the regression gate compares the
+same leaves every run.
 
 Per-mode numbers are also persisted to BENCH_serve.json at the repo root.
 
@@ -90,10 +92,12 @@ def run(n_dev: int = 8):
     backends = [("dense", None, scfg)]
     for mode in ("baseline", "sw", "xqueue", "qlr"):
         backends.append((f"ring-{mode}", mode, scfg))
-    # block prefill variants
+    # block prefill variants — every backend, so the regression gate sees
+    # a uniform leaf set (prefill_block_tok_s for all, not just two)
     scfg_block = replace(scfg, prefill_chunk=P_LEN - 1)
     backends.append(("dense", None, scfg_block))
-    backends.append(("ring-qlr", "qlr", scfg_block))
+    for mode in ("baseline", "sw", "xqueue", "qlr"):
+        backends.append((f"ring-{mode}", mode, scfg_block))
 
     for name, mode, sc in backends:
         be = DecodeBackend(cfg, sc, params) if mode is None else \

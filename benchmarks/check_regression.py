@@ -36,7 +36,11 @@ def _walk(node, prefix=""):
 
 
 def compare(baseline: dict, fresh: dict, threshold: float):
-    """Returns (failures, checked) over the gating throughput leaves."""
+    """Returns (failures, checked, new_leaves) over throughput leaves.
+
+    ``new_leaves`` are fresh ``tok_s`` leaves with no baseline counterpart
+    (renamed or brand-new): they can't gate this run, but silently skipping
+    them hides drift — callers print them as ``[new]``."""
     base_leaves = _walk(baseline)
     fresh_leaves = _walk(fresh)
     failures, checked = [], []
@@ -52,7 +56,9 @@ def compare(baseline: dict, fresh: dict, threshold: float):
         if ratio < 1.0 - threshold:
             failures.append((path, old, new,
                              f"{100 * (1 - ratio):.1f}% regression"))
-    return failures, checked
+    new_leaves = [(path, val) for path, val in sorted(fresh_leaves.items())
+                  if GATE_KEY in path and path not in base_leaves]
+    return failures, checked, new_leaves
 
 
 def main(argv=None) -> int:
@@ -79,14 +85,18 @@ def main(argv=None) -> int:
             continue
         baseline = json.loads(base_p.read_text())
         fresh = json.loads(fresh_p.read_text())
-        failures, checked = compare(baseline, fresh, args.threshold)
+        failures, checked, new_leaves = compare(baseline, fresh,
+                                                args.threshold)
         for path, old, new, ratio in checked:
             print(f"[ok]   {name}:{path} {old:.1f} -> {new:.1f} "
                   f"({100 * ratio:.0f}%)")
+        for path, val in new_leaves:
+            print(f"[new]  {name}:{path} = {val:.1f} "
+                  "(no baseline counterpart; gates after commit)")
         for path, old, new, why in failures:
             new_s = f"{new:.1f}" if new is not None else "missing"
             print(f"[FAIL] {name}:{path} {old:.1f} -> {new_s} ({why})")
-        if not checked and not failures:
+        if not checked and not failures and not new_leaves:
             print(f"[skip] {name}: no '{GATE_KEY}' leaves to gate on")
         any_fail |= bool(failures)
     return 1 if any_fail else 0

@@ -105,6 +105,10 @@ class ModelConfig:
     # qlr     : double-buffered overlapped ppermute ring (autonomous queues)
     systolic_mode: str = "baseline"
     systolic_chunks: int = 0       # 0 -> one chunk per ring hop (= axis size)
+    # Run each ring hop's local consume as one fused Pallas kernel launch
+    # (flash-attention hop / tile matmul) instead of the jnp oracle —
+    # interpret mode off-TPU, jnp fallback when shapes don't tile.
+    use_kernel: bool = False
 
     # remat / scan
     remat: str = "full"            # none | full | selective

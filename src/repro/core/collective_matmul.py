@@ -35,6 +35,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import optimization_barrier
 from repro.core import queues
 from repro.core.topology import Topology, ring
+from repro.kernels.systolic_matmul.ops import tile_matmul
 from repro.obs import linkstats
 
 # ---------------------------------------------------------------------------
@@ -42,8 +43,17 @@ from repro.obs import linkstats
 # ---------------------------------------------------------------------------
 
 
+def _local_mm(x, w, acc=None, use_kernel: bool = False):
+    """The PE-local MAC of every schedule here: (acc +) x @ w, either the
+    jnp oracle or the systolic_matmul tile kernel (``use_kernel``)."""
+    if use_kernel:
+        return tile_matmul(x, w, acc)
+    y = jnp.einsum("...k,kn->...n", x, w)
+    return y if acc is None else acc + y
+
+
 def ring_ag_matmul(x_local, ws: Sequence[jax.Array], topo: Topology,
-                   mode: str = "qlr"):
+                   mode: str = "qlr", *, use_kernel: bool = False):
     """All-gather(x) @ w_i for each w_i, streamed around a ring.
 
     x_local: [..., s_local, d] (this device's shard of the streamed operand)
@@ -53,7 +63,9 @@ def ring_ag_matmul(x_local, ws: Sequence[jax.Array], topo: Topology,
     baseline: one all-gather + matmuls (shared-memory model).
     ring modes: n hops; at hop t the buffer holds shard (my - t) mod n, and
     its partial products are written into the output at that offset —
-    output-stationary accumulation with the operand flowing through.
+    output-stationary accumulation with the operand flowing through. With
+    ``use_kernel`` the per-hop partial runs as one Pallas tile-kernel
+    launch instead of the jnp einsum.
     """
     n = topo.size
     s_local = x_local.shape[-2]
@@ -61,7 +73,7 @@ def ring_ag_matmul(x_local, ws: Sequence[jax.Array], topo: Topology,
         xs = jax.lax.all_gather(x_local, topo.axis, axis=x_local.ndim - 2,
                                 tiled=True)
         linkstats.record_multicast(x_local, fan_in=n)
-        return [jnp.einsum("...sd,df->...sf", xs, w) for w in ws]
+        return [_local_mm(xs, w, use_kernel=use_kernel) for w in ws]
 
     my = jax.lax.axis_index(topo.axis)
     # src_table[d, t] = which shard device d holds after t hops of the
@@ -78,7 +90,7 @@ def ring_ag_matmul(x_local, ws: Sequence[jax.Array], topo: Topology,
         offset = src * s_local
         new_state = []
         for o, w in zip(state, ws):
-            part = jnp.einsum("...sd,df->...sf", buf, w)
+            part = _local_mm(buf, w, use_kernel=use_kernel)
             new_state.append(jax.lax.dynamic_update_slice_in_dim(
                 o, part.astype(o.dtype), offset, axis=o.ndim - 2))
         return new_state
@@ -101,7 +113,8 @@ def _source_table(topo: Topology):
     return table
 
 
-def ring_matmul_rs(x, w, topo: Topology, mode: str = "qlr"):
+def ring_matmul_rs(x, w, topo: Topology, mode: str = "qlr", *,
+                   use_kernel: bool = False):
     """(x @ w) reduce-scattered over the sequence dim, as a ring of
     traveling accumulators.
 
@@ -110,14 +123,16 @@ def ring_matmul_rs(x, w, topo: Topology, mode: str = "qlr"):
 
     Chunk schedule: device d computes chunk (d + n - 1 - t) mod n at hop t,
     so each accumulator arrives at its owner exactly when the last partial
-    joins (the systolic pulse).
+    joins (the systolic pulse). With ``use_kernel`` each hop's partial is
+    folded into the traveling accumulator inside one Pallas launch (the
+    kernel's carry-in tile), not a separate matmul + add.
     """
     n = topo.size
     s = x.shape[-2]
     assert s % n == 0, (s, n)
     s_local = s // n
     if mode == "baseline":
-        y = jnp.einsum("...sf,fd->...sd", x, w)
+        y = _local_mm(x, w, use_kernel=use_kernel)
         y_s = jax.lax.psum_scatter(y, topo.axis,
                                    scatter_dimension=y.ndim - 2, tiled=True)
         linkstats.record_multicast(y_s, fan_in=n)   # n partials per chunk
@@ -125,11 +140,11 @@ def ring_matmul_rs(x, w, topo: Topology, mode: str = "qlr"):
 
     my = jax.lax.axis_index(topo.axis)
 
-    def part(t, x_src):
+    def part(t, x_src, acc=None):
         c = jnp.mod(my + n - 1 - t, n)
         xc = jax.lax.dynamic_slice_in_dim(x_src, c * s_local, s_local,
                                           axis=x_src.ndim - 2)
-        return jnp.einsum("...sf,fd->...sd", xc, w)
+        return _local_mm(xc, w, acc, use_kernel=use_kernel)
 
     acc = part(0, x)
     for t in range(1, n):
@@ -137,20 +152,23 @@ def ring_matmul_rs(x, w, topo: Topology, mode: str = "qlr"):
         if mode in ("sw", "xqueue"):
             # serialize: the next partial waits for the queue transfer
             x_tied, moved = optimization_barrier((x, moved))
-            acc = moved + part(t, x_tied)
+            acc = part(t, x_tied, moved)
         else:
-            acc = moved + part(t, x)  # qlr: hop overlaps the partial matmul
+            acc = part(t, x, moved)  # qlr: hop overlaps the partial matmul
     return acc
 
 
 def cannon_matmul(a_local, b_local, row_topo: Topology, col_topo: Topology,
                   rows: int, cols: int, mode: str = "qlr",
-                  preskewed: bool = False):
+                  preskewed: bool = False, use_kernel: bool = False):
     """2-D output-stationary systolic matmul (Cannon) on an RxC grid folded
     from one mesh axis. Device (r,c) ends with C tile = sum_k A[r,k]B[k,c].
 
     a_local: [m_loc, k_loc] — A tile; b_local: [k_loc, n_loc] — B tile.
     Requires rows == cols (square torus) for the classic skew schedule.
+    Main-loop hops carry indices t = 0..n-2; the skew phase's masked hops
+    carry t = n-1..2n-3 so fault injection / checked links can target them
+    separately.
     """
     assert rows == cols, "Cannon requires a square grid"
     n = rows
@@ -158,14 +176,15 @@ def cannon_matmul(a_local, b_local, row_topo: Topology, col_topo: Topology,
     r, c = my // cols, my % cols
 
     if not preskewed:
-        # initial skew: A row r shifts left r times; B col c shifts up c times
-        a_local = _masked_rot(a_local, row_topo, r, n)
-        b_local = _masked_rot(b_local, col_topo, c, n)
+        # initial skew: A row r shifts left r times; B col c shifts up c
+        # times — over the *requested* link mode, not hardwired qlr
+        a_local = _masked_rot(a_local, row_topo, r, n, mode=mode, t0=n - 1)
+        b_local = _masked_rot(b_local, col_topo, c, n, mode=mode, t0=n - 1)
 
     acc = jnp.zeros((a_local.shape[0], b_local.shape[1]),
                     jnp.promote_types(a_local.dtype, b_local.dtype))
     for t in range(n):
-        acc = acc + a_local @ b_local
+        acc = _local_mm(a_local, b_local, acc, use_kernel=use_kernel)
         if t < n - 1:
             if mode in ("sw", "xqueue"):
                 acc, a_local, b_local = optimization_barrier(
@@ -175,10 +194,16 @@ def cannon_matmul(a_local, b_local, row_topo: Topology, col_topo: Topology,
     return acc
 
 
-def _masked_rot(x, topo: Topology, times, n: int):
-    """Rotate ``x`` ``times`` hops (traced count) via n-step masked loop."""
+def _masked_rot(x, topo: Topology, times, n: int, mode: str = "qlr",
+                t0: int = 0):
+    """Rotate ``x`` ``times`` hops (traced count) via n-step masked loop.
+
+    The loop's i-th hop carries sequence number ``t0 + i`` so FaultSpec /
+    checked links can reach skew traffic, and runs over the requested link
+    ``mode`` so sw/xqueue schedules book their true skew cost.
+    """
     def body(i, v):
-        moved = queues.hop(topo, v, "qlr")
+        moved = queues.hop(topo, v, mode, t=t0 + i)
         return jnp.where(i < times, moved, v)
     with linkstats.mute():                # loop body must not leak tracers
         out = jax.lax.fori_loop(0, n - 1, body, x)
@@ -222,7 +247,8 @@ def attn_applicable(x, num_heads: int, num_kv_heads: int, head_dim: int,
             and b % bsz == 0 and d % max(sizes.get("data", 1), 1) == 0)
 
 
-def systolic_qkv(x, wq, wk, wv, mesh: Mesh, mode: str = "qlr"):
+def systolic_qkv(x, wq, wk, wv, mesh: Mesh, mode: str = "qlr", *,
+                 use_kernel: bool = False):
     """QKV projections as ONE systolic ring: the x stream feeds three weight
     sinks (the paper's data-reuse degree — one queue, several MACs).
 
@@ -245,7 +271,8 @@ def systolic_qkv(x, wq, wk, wv, mesh: Mesh, mode: str = "qlr"):
             if "data" in sizes:
                 w_l = jax.lax.all_gather(w_l, "data", axis=0, tiled=True)
             ws.append(w_l.reshape(w_l.shape[0], -1))
-        q2, k2, v2 = ring_ag_matmul(x_l, ws, topo, mode)
+        q2, k2, v2 = ring_ag_matmul(x_l, ws, topo, mode,
+                                     use_kernel=use_kernel)
         def unflat(y2, w_l):
             b_, s_ = y2.shape[0], y2.shape[1]
             return y2.reshape(b_, s_, w_l.shape[1], w_l.shape[2])
@@ -255,7 +282,8 @@ def systolic_qkv(x, wq, wk, wv, mesh: Mesh, mode: str = "qlr"):
                                 x, wq, wk, wv)
 
 
-def systolic_out_proj(attn_out, wo, mesh: Mesh, mode: str = "qlr"):
+def systolic_out_proj(attn_out, wo, mesh: Mesh, mode: str = "qlr", *,
+                      use_kernel: bool = False):
     """Attention output projection with a reduce-scatter ring: partial sums
     over the head shards travel to their sequence-shard owners.
 
@@ -276,13 +304,14 @@ def systolic_out_proj(attn_out, wo, mesh: Mesh, mode: str = "qlr"):
         b_, s_, hl, hd = o_l.shape
         o2 = o_l.reshape(b_, s_, hl * hd)
         w2 = wo_l.reshape(hl * hd, wo_l.shape[2])
-        return ring_matmul_rs(o2, w2, topo, mode)
+        return ring_matmul_rs(o2, w2, topo, mode, use_kernel=use_kernel)
 
     return linkstats.shard_call(body, mesh, (x_spec, w_spec), out_spec,
                                 attn_out, wo)
 
 
-def systolic_ffn(x, w_gate, w_up, w_down, mesh: Mesh, mode: str = "qlr"):
+def systolic_ffn(x, w_gate, w_up, w_down, mesh: Mesh, mode: str = "qlr",
+                 *, use_kernel: bool = False):
     """SwiGLU FFN with systolic sequence-parallel rings over 'model':
 
       x (seq-sharded) --AG-ring--> [gate|up] (one stream, two weight sinks:
@@ -309,9 +338,11 @@ def systolic_ffn(x, w_gate, w_up, w_down, mesh: Mesh, mode: str = "qlr"):
             wd = jax.lax.all_gather(wd_l, "data", axis=1, tiled=True)
         else:
             wg, wu, wd = wg_l, wu_l, wd_l
-        gate, up = ring_ag_matmul(x_l, [wg, wu], topo, mode)
+        gate, up = ring_ag_matmul(x_l, [wg, wu], topo, mode,
+                                  use_kernel=use_kernel)
         h = jax.nn.silu(gate) * up                    # [B_l, S, f_local]
-        return ring_matmul_rs(h, wd, topo, mode)      # [B_l, s_local, d]
+        return ring_matmul_rs(h, wd, topo, mode,      # [B_l, s_local, d]
+                              use_kernel=use_kernel)
 
     return linkstats.shard_call(
         body, mesh, (x_spec, wg_spec, wg_spec, wd_spec), out_spec,

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.obs import linkstats
 from repro.core import queues
+from repro.kernels.flash_attention import ops as flash_ops
 from repro.core.collective_matmul import _batch_axes, _source_table
 from repro.core.topology import Topology, ring
 
@@ -87,7 +88,7 @@ def _block_update(state, q32, k_blk, v_blk, q_pos, k_pos, *, causal: bool,
 
 def ring_attention(q_local, k_local, v_local, topo: Topology,
                    mode: str = "qlr", *, causal: bool = True,
-                   window: int = 0):
+                   window: int = 0, use_kernel: bool = False):
     """shard_map-local systolic attention over one ring topology.
 
     q_local:        [B, sq_local, H, hd] — resident (output-stationary).
@@ -95,6 +96,10 @@ def ring_attention(q_local, k_local, v_local, topo: Topology,
                     is pushed around the ring; at hop t the buffer holds the
                     shard of origin ``_source_table(topo)[my, t]`` and its
                     global positions drive the causal/window mask.
+    use_kernel:     per-hop consume runs as one fused Pallas launch
+                    (``kernels/flash_attention.flash_hop``) instead of the
+                    jnp ``_block_update`` oracle — the paper's PE-level
+                    queue-pop-feeds-the-MAC inside each device.
 
     Returns [B, sq_local, H, hd] fp32 — each device's attention output for
     its own query shard (the sharded store / gather collective).
@@ -108,31 +113,40 @@ def ring_attention(q_local, k_local, v_local, topo: Topology,
     q32 = q_local.astype(jnp.float32)
     q_pos = my * sq + jnp.arange(sq)
 
+    m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+
     if mode == "baseline":
         # shared-memory multicast: every PE reads the full K/V
         ks = jax.lax.all_gather(k_local, topo.axis, axis=1, tiled=True)
         vs = jax.lax.all_gather(v_local, topo.axis, axis=1, tiled=True)
         linkstats.record_multicast((k_local, v_local), fan_in=n)
-        m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
-        l0 = jnp.zeros((b, h, sq), jnp.float32)
-        acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
-        m, l, acc = _block_update(
-            (m0, l0, acc0), q32, ks, vs, q_pos, jnp.arange(n * s_local),
-            causal=causal, window=window, scale=scale, num_heads=h)
+        if use_kernel:
+            m, l, acc = flash_ops.flash_hop(
+                q_local, ks, vs, (m0, l0, acc0), q_offset=my * sq,
+                k_offset=0, causal=causal, window=window)
+        else:
+            m, l, acc = _block_update(
+                (m0, l0, acc0), q32, ks, vs, q_pos, jnp.arange(n * s_local),
+                causal=causal, window=window, scale=scale, num_heads=h)
     else:
         src_table = jnp.asarray(_source_table(topo))
         kv0 = jnp.stack([k_local, v_local])  # one queue element per hop
 
         def consume(state, kv, t):
             src = src_table[my, t]
+            if use_kernel:
+                # one fused kernel launch per hop: the arriving block folds
+                # straight into the carried (m, l, acc)
+                return flash_ops.flash_hop(
+                    q_local, kv[0], kv[1], state, q_offset=my * sq,
+                    k_offset=src * s_local, causal=causal, window=window)
             k_pos = src * s_local + jnp.arange(s_local)
             return _block_update(state, q32, kv[0], kv[1], q_pos, k_pos,
                                  causal=causal, window=window, scale=scale,
                                  num_heads=h)
 
-        m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
-        l0 = jnp.zeros((b, h, sq), jnp.float32)
-        acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
         (m, l, acc), _ = queues.stream(topo, kv0, n, consume,
                                        (m0, l0, acc0), mode)
 
@@ -161,7 +175,8 @@ def ring_attn_applicable(q, k, mesh: Mesh) -> bool:
 
 
 def systolic_ring_attention(q, k, v, mesh: Mesh, mode: str = "qlr", *,
-                            causal: bool = True, window: int = 0):
+                            causal: bool = True, window: int = 0,
+                            use_kernel: bool = False):
     """Ring attention over the 'model' axis: sequence sharded, heads whole.
 
     q: [B,S,H,hd], k/v: [B,S,Kv,hd] (global arrays). Returns the full
@@ -176,7 +191,7 @@ def systolic_ring_attention(q, k, v, mesh: Mesh, mode: str = "qlr", *,
 
     def body(q_l, k_l, v_l):
         return ring_attention(q_l, k_l, v_l, topo, mode, causal=causal,
-                              window=window)
+                              window=window, use_kernel=use_kernel)
 
     return linkstats.shard_call(body, mesh, (spec, spec, spec), spec,
                                 q, k, v)
@@ -209,7 +224,7 @@ def _decode_update(state, q32, k_blk, v_blk, valid, *, scale: float,
 
 
 def ring_decode_attention(q_local, k_all, v_all, pos_all, topo: Topology,
-                          mode: str = "qlr"):
+                          mode: str = "qlr", *, use_kernel: bool = False):
     """shard_map-local systolic decode attention over one ring topology —
     the dual of :func:`ring_attention`: the KV cache shard is the
     **resident** operand (weight-stationary, like the expert shards in
@@ -244,12 +259,18 @@ def ring_decode_attention(q_local, k_all, v_all, pos_all, topo: Topology,
         k_my = jax.lax.dynamic_slice_in_dim(ks, my * b_loc, b_loc, 0)
         v_my = jax.lax.dynamic_slice_in_dim(vs, my * b_loc, b_loc, 0)
         pos_my = jax.lax.dynamic_slice_in_dim(pos_all, my * b_loc, b_loc, 0)
-        valid = jnp.arange(n * s_loc)[None, :] <= pos_my[:, None]
         m0 = jnp.full((b_loc, h, 1), _NEG_INF, jnp.float32)
         l0 = jnp.zeros((b_loc, h, 1), jnp.float32)
         acc0 = jnp.zeros((b_loc, h, 1, hd), jnp.float32)
-        m, l, acc = _decode_update((m0, l0, acc0), q32, k_my, v_my, valid,
-                                   scale=scale, num_heads=h)
+        if use_kernel:
+            # slot j valid for row b iff j <= pos[b]  <=>  j < pos[b]+1
+            m, l, acc = flash_ops.flash_hop(
+                q32, k_my, v_my, (m0, l0, acc0), q_offset=0, k_offset=0,
+                k_len=pos_my + 1, causal=False, window=0)
+        else:
+            valid = jnp.arange(n * s_loc)[None, :] <= pos_my[:, None]
+            m, l, acc = _decode_update((m0, l0, acc0), q32, k_my, v_my,
+                                       valid, scale=scale, num_heads=h)
     else:
         src_table = jnp.asarray(_source_table(topo))
 
@@ -261,6 +282,13 @@ def ring_decode_attention(q_local, k_all, v_all, pos_all, topo: Topology,
             v_blk = jax.lax.dynamic_slice_in_dim(v_all, src * b_loc, b_loc, 0)
             pos_blk = jax.lax.dynamic_slice_in_dim(pos_all, src * b_loc,
                                                    b_loc, 0)
+            if use_kernel:
+                # resident slots are global [my*s_loc, ...); per-row bound
+                # pos+1 reproduces `slot <= pos` with causal=False
+                return flash_ops.flash_hop(
+                    q_stream.astype(jnp.float32), k_blk, v_blk, state,
+                    q_offset=0, k_offset=my * s_loc, k_len=pos_blk + 1,
+                    causal=False, window=0)
             valid = slot_pos[None, :] <= pos_blk[:, None]   # [b_loc, s_loc]
             return _decode_update(state, q_stream.astype(jnp.float32),
                                   k_blk, v_blk, valid, scale=scale,
@@ -295,7 +323,7 @@ def ring_decode_applicable(q, k_cache, mesh: Mesh) -> bool:
 
 
 def systolic_ring_decode(q, k_cache, v_cache, pos, mesh: Mesh,
-                         mode: str = "qlr"):
+                         mode: str = "qlr", *, use_kernel: bool = False):
     """Ring-sharded decode attention over the 'model' axis.
 
     q: [B,1,H,hd]; k_cache/v_cache: [B,S,Kv,hd] (global); pos: [B]. The
@@ -311,7 +339,8 @@ def systolic_ring_decode(q, k_cache, v_cache, pos, mesh: Mesh,
     pos_spec = P(batch if batch else None)
 
     def body(q_l, k_l, v_l, pos_l):
-        return ring_decode_attention(q_l, k_l, v_l, pos_l, topo, mode)
+        return ring_decode_attention(q_l, k_l, v_l, pos_l, topo, mode,
+                                     use_kernel=use_kernel)
 
     return linkstats.shard_call(
         body, mesh, (q_spec, kv_spec, kv_spec, pos_spec), q_spec,

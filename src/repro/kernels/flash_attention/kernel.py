@@ -1,4 +1,4 @@
-"""Streaming-softmax (flash) attention Pallas kernel.
+"""Streaming-softmax (flash) attention Pallas kernel with carried state.
 
 The KV stream is the systolic reading of attention: the stationary state
 per q block is (m, l, acc) in VMEM scratch; KV blocks flow through the
@@ -6,6 +6,22 @@ grid's sequential dimension exactly like queue pops, with Pallas's implicit
 double-buffering prefetching block k+1 during block k's MXU work (the QLR
 analogue). Oracle: models/attention.blocked_attention (same online-softmax
 math in pure jnp).
+
+Two entry points share one kernel body:
+
+  * ``flash_carry`` — the hop-fused form: (m, l, acc) enters as *inputs*
+    and leaves as *outputs*, so one ring hop of
+    ``core/ring_attention.ring_attention`` is a single kernel launch that
+    folds the arriving K/V block into the resident online-softmax state
+    (the paper's queue-pop-feeds-the-MAC at PE level). Masking is
+    position-based (global q/k offsets for out-of-order ring arrival,
+    sliding ``window``, per-row valid length ``klen`` for padded tails and
+    per-row decode positions), and GQA is native: the query head groups
+    ride a separate grid dimension over one unexpanded KV head — no
+    ``jnp.repeat`` materialization.
+  * ``flash_attention`` — the self-contained form (zero state in, the
+    normalized output written on the last KV block), kept as the
+    single-launch local kernel.
 """
 from __future__ import annotations
 
@@ -21,66 +37,130 @@ from repro.compat import pallas_compiler_params
 _NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, bq: int, bkv: int, n_kv: int, causal: bool):
-    iq = pl.program_id(1)
-    ik = pl.program_id(2)
+def largest_dividing_block(dim: int, preferred: int) -> int:
+    """Largest block size <= preferred that divides dim exactly (>= 1).
+
+    Non-tiling shapes (e.g. S=192 under the default 128 block) shrink to
+    the largest divisor instead of crashing the wrapper's divisibility
+    assert; callers warn once when the shrink is large."""
+    b = max(1, min(preferred, dim))
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, klen_ref,
+                  m_ref, l_ref, acc_ref,
+                  mo_ref, lo_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, n_kv: int, causal: bool, window: int,
+                  normalize: bool):
+    """Grid point (b', g, iq, ik): fold KV block ik into q block (b',g,iq).
+
+    b' indexes batch x KV-head (the unexpanded GQA layout), g the query
+    head group sharing that KV head. Positions arrive as data (they are
+    traced device/shard offsets inside shard_map), so the same compiled
+    kernel serves every ring hop.
+    """
+    ik = pl.program_id(3)
 
     @pl.when(ik == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def _load_state():
+        m_scr[...] = m_ref[0, 0]
+        l_scr[...] = l_ref[0, 0]
+        acc_scr[...] = acc_ref[0, 0]
 
-    q = q_ref[0].astype(jnp.float32)                         # [bq, d]
+    q = q_ref[0, 0].astype(jnp.float32)                      # [bq, d]
     k = k_ref[0].astype(jnp.float32)                         # [bkv, d]
     v = v_ref[0].astype(jnp.float32)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    q_pos = qpos_ref[:, 0]                                   # [bq] int32
+    k_pos = kpos_ref[:, 0]                                   # [bkv] int32
+    mask = k_pos[None, :] < klen_ref[0, 0]
     if causal:
-        q_pos = iq * bq + jnp.arange(bq)
-        k_pos = ik * bkv + jnp.arange(bkv)
-        mask = k_pos[None, :] <= q_pos[:, None]
-        s = jnp.where(mask, s, _NEG_INF)
+        mask = jnp.logical_and(mask, k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = jnp.logical_and(mask,
+                               q_pos[:, None] - k_pos[None, :] < window)
+    s = jnp.where(mask, s, _NEG_INF)
 
-    m_prev = m_ref[...]
+    m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     p = jnp.exp(s - m_new)
     corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
         p, v, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    m_scr[...] = m_new
 
     @pl.when(ik == n_kv - 1)
     def _store():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-                    ).astype(o_ref.dtype)
+        mo_ref[0, 0] = m_scr[...]
+        lo_ref[0, 0] = l_scr[...]
+        if normalize:
+            o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                           ).astype(o_ref.dtype)
+        else:
+            o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
 
 
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, bq: int = 128, bkv: int = 128,
-                    interpret: bool = False) -> jax.Array:
-    """q,k,v: [BH, S, D] (heads folded into batch). Returns [BH, S, D]."""
-    bh, s, d = q.shape
-    skv = k.shape[1]
-    bq = min(bq, s)
-    bkv = min(bkv, skv)
-    assert s % bq == 0 and skv % bkv == 0
+def flash_carry(q, k, v, m, l, acc, q_pos, k_pos, klen, *,
+                causal: bool = True, window: int = 0, bq: int = 128,
+                bkv: int = 128, normalize: bool = False,
+                interpret: bool = False, out_dtype=None):
+    """One fused online-softmax pass with carried state.
+
+    q:          [B', G, Sq, D] — B' = batch x KV-heads, G = heads per KV
+                head (native GQA; G=1 for MHA).
+    k, v:       [B', T, D] — one unexpanded KV block.
+    m, l:       [B', G, Sq, 1] fp32 running max / normalizer.
+    acc:        [B', G, Sq, D] fp32 accumulator.
+    q_pos:      [Sq, 1] int32 global query positions (may be traced).
+    k_pos:      [T, 1] int32 global key positions.
+    klen:       [B', 1] int32 per-row valid-key bound: key j participates
+                iff k_pos[j] < klen[b'] (padded tails, decode positions).
+
+    Returns (m, l, acc) updated; with ``normalize=True`` the third output
+    is instead the normalized attention output acc/l cast to ``out_dtype``
+    (default q.dtype) — the self-contained single-launch form.
+    """
+    bh, g, sq, d = q.shape
+    t = k.shape[1]
+    bq = largest_dividing_block(sq, bq)
+    bkv = largest_dividing_block(t, bkv)
     scale = 1.0 / (d ** 0.5)
-    body = functools.partial(_flash_kernel, scale=scale, bq=bq, bkv=bkv,
-                             n_kv=skv // bkv, causal=causal)
+    n_kv = t // bkv
+    out_dtype = (out_dtype or q.dtype) if normalize else jnp.float32
+    body = functools.partial(
+        _flash_kernel, scale=scale, n_kv=n_kv, causal=causal,
+        window=window, normalize=normalize)
     params = pallas_compiler_params(
-        dimension_semantics=("parallel", "parallel", "arbitrary"))
+        dimension_semantics=("parallel", "parallel", "parallel",
+                            "arbitrary"))
     call = pl.pallas_call(
         body,
-        grid=(bh, s // bq, skv // bkv),
+        grid=(bh, g, sq // bq, n_kv),
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, h, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, h, i, j: (b, j, 0)),
+            pl.BlockSpec((bq, 1), lambda b, h, i, j: (i, 0)),
+            pl.BlockSpec((bkv, 1), lambda b, h, i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, i, j: (b, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, g, sq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bh, g, sq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bh, g, sq, d), out_dtype),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -89,4 +169,28 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret=interpret,
         **({"compiler_params": params} if params else {}),
     )
-    return call(q, k, v)
+    return tuple(call(q, k, v, q_pos.astype(jnp.int32),
+                      k_pos.astype(jnp.int32), klen.astype(jnp.int32),
+                      m, l, acc))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bkv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q,k,v: [BH, S, D] (heads folded into batch). Returns [BH, S, D].
+
+    The self-contained form of :func:`flash_carry`: zero initial state,
+    one launch, normalized output."""
+    bh, s, d = q.shape
+    skv = k.shape[1]
+    m0 = jnp.full((bh, 1, s, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bh, 1, s, 1), jnp.float32)
+    acc0 = jnp.zeros((bh, 1, s, d), jnp.float32)
+    q_pos = jnp.arange(s, dtype=jnp.int32)[:, None]
+    k_pos = jnp.arange(skv, dtype=jnp.int32)[:, None]
+    klen = jnp.full((bh, 1), skv, jnp.int32)
+    _, _, out = flash_carry(
+        q[:, None], k, v, m0, l0, acc0, q_pos, k_pos, klen,
+        causal=causal, window=0, bq=bq, bkv=bkv, normalize=True,
+        interpret=interpret, out_dtype=q.dtype)
+    return out[:, 0]

@@ -1,23 +1,131 @@
-"""jit'd wrapper for the systolic matmul kernel.
+"""jit'd wrappers for the systolic matmul kernel.
 
 On non-TPU backends (this container) the kernel body executes in Pallas
 interpret mode; on TPU the same BlockSpecs compile to Mosaic.
+
+``tile_matmul`` is the hop-consume form used by ``core/collective_matmul``:
+it flattens leading batch dims, threads an optional carried accumulator
+into the kernel (the traveling C tile of Cannon / reduce-scatter rings),
+and falls back to plain jnp when a dimension only tiles degenerately.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.systolic_matmul.kernel import matmul as _matmul
+from repro.kernels.systolic_matmul.kernel import (
+    largest_dividing_block,
+    matmul as _matmul,
+)
+
+_WARNED_SHAPES: set = set()
+_MIN_BLOCK = 8  # below this, a Pallas grid dim degenerates — use jnp
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _warn_once(key, msg):
+    if key not in _WARNED_SHAPES:
+        _WARNED_SHAPES.add(key)
+        warnings.warn(msg, stacklevel=3)
+
+
+def _tiles_ok(m: int, k: int, n: int, bm: int, bk: int, bn: int) -> bool:
+    for dim, pref in ((m, bm), (k, bk), (n, bn)):
+        if dim >= _MIN_BLOCK and largest_dividing_block(dim, pref) < _MIN_BLOCK:
+            return False
+    return True
+
+
+@functools.lru_cache(maxsize=None)
+def _mm_fused(bm: int, bn: int, bk: int, interpret: bool,
+              out_dtype_name: str, has_acc: bool):
+    """The tile launch with a custom VJP: forward runs the Pallas kernel,
+    backward is the plain-jnp gradient (Pallas has no JVP rule here; the
+    ring schedules are differentiated by the training loop)."""
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    if has_acc:
+        def prim(x2, w, acc2):
+            return _matmul(x2, w, acc2, bm=bm, bn=bn, bk=bk,
+                           interpret=interpret, out_dtype=out_dtype)
+
+        def ref(x2, w, acc2):
+            return acc2 + jnp.dot(x2.astype(out_dtype), w.astype(out_dtype))
+    else:
+        def prim(x2, w):
+            return _matmul(x2, w, bm=bm, bn=bn, bk=bk,
+                           interpret=interpret, out_dtype=out_dtype)
+
+        def ref(x2, w):
+            return jnp.dot(x2.astype(out_dtype), w.astype(out_dtype))
+
+    f = jax.custom_vjp(prim)
+
+    def fwd(*args):
+        return prim(*args), args
+
+    def bwd(res, ct):
+        _, vjp = jax.vjp(ref, *res)
+        return vjp(ct)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
 def systolic_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128,
                     bn: int = 128, bk: int = 128) -> jax.Array:
-    return _matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=not _on_tpu())
+    m, k = a.shape
+    n = b.shape[1]
+    if not _tiles_ok(m, k, n, bm, bk, bn):
+        _warn_once(("mm", a.shape, b.shape),
+                   f"systolic_matmul: {a.shape} @ {b.shape} does not tile; "
+                   "falling back to jnp")
+        return jnp.dot(a, b)
+    for dim, pref, what in ((m, bm, "M"), (k, bk, "K"), (n, bn, "N")):
+        if largest_dividing_block(dim, pref) != min(pref, dim):
+            _warn_once((what, dim, pref),
+                       f"systolic_matmul: {what}={dim} does not tile by "
+                       f"{pref}; shrinking block")
+    out_dtype = jnp.result_type(a.dtype, b.dtype)
+    return _mm_fused(bm, bn, bk, not _on_tpu(), jnp.dtype(out_dtype).name,
+                     False)(a, b)
+
+
+def tile_matmul(x: jax.Array, w: jax.Array, acc: jax.Array | None = None, *,
+                bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    """(acc +) x @ w with leading batch dims flattened into M.
+
+    x: [..., K], w: [K, N], acc: [..., N] or None. The accumulator is the
+    carried hop state of the ring/Cannon schedules — folding it in here
+    makes one hop's consume a single kernel launch. Output is fp32 when
+    acc is fp32 (matching the jnp `partial + x @ w` promotion), else
+    x.dtype.
+    """
+    k, n = w.shape
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    out_dtype = jnp.result_type(x.dtype, w.dtype if acc is None else acc.dtype)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not _tiles_ok(m, k, n, bm, bk, bn):
+        _warn_once(("tile", x.shape, w.shape),
+                   f"tile_matmul: {x.shape} @ {w.shape} does not tile; "
+                   "falling back to jnp")
+        y = jnp.einsum("...k,kn->...n", x.astype(out_dtype),
+                       w.astype(out_dtype))
+        return y if acc is None else acc + y
+    x2 = x.reshape(m, k)
+    fused = _mm_fused(bm, bn, bk, interpret, jnp.dtype(out_dtype).name,
+                      acc is not None)
+    y = fused(x2, w) if acc is None else fused(x2, w, acc.reshape(m, n))
+    return y.reshape(*lead, n)

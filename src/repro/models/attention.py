@@ -84,7 +84,8 @@ def _qkv(params, x, cfg: ModelConfig, positions):
             # one systolic x-stream feeds the three projection sinks
             q, k, v = cm.systolic_qkv(
                 x, params["wq"].astype(dt), params["wk"].astype(dt),
-                params["wv"].astype(dt), ctx.mesh, cfg.systolic_mode)
+                params["wv"].astype(dt), ctx.mesh, cfg.systolic_mode,
+                use_kernel=cfg.use_kernel)
             done = True
     if not done:
         q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
@@ -210,7 +211,7 @@ def gqa_forward(params, x, cfg: ModelConfig, positions=None, return_kv=False):
             # q shards stay resident, K/V blocks ride the 'model' ring
             out = ra.systolic_ring_attention(
                 q, k, v, ctx.mesh, cfg.systolic_mode, causal=True,
-                window=cfg.sliding_window)
+                window=cfg.sliding_window, use_kernel=cfg.use_kernel)
             used_ring = True
     if out is None:
         if s >= BLOCKED_ATTN_THRESHOLD:
@@ -230,7 +231,8 @@ def gqa_forward(params, x, cfg: ModelConfig, positions=None, return_kv=False):
         from repro.core import collective_matmul as cm
         # reduce-scatter ring: head-shard partials travel to seq owners
         y = cm.systolic_out_proj(out, params["wo"].astype(adtype(cfg)),
-                                 ctx.mesh, cfg.systolic_mode)
+                                 ctx.mesh, cfg.systolic_mode,
+                                 use_kernel=cfg.use_kernel)
     else:
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(adtype(cfg)))
         # reduce-scatter (not all-reduce) into the sequence-parallel layout
@@ -294,7 +296,8 @@ def gqa_decode(params, x, cache, cfg: ModelConfig, active=None):
         from repro.core import ring_attention as ra
         if ra.ring_decode_applicable(q, k_all, ctx.mesh):
             out = ra.systolic_ring_decode(q, k_all, v_all, pos, ctx.mesh,
-                                          cfg.systolic_mode)
+                                          cfg.systolic_mode,
+                                          use_kernel=cfg.use_kernel)
     if out is None:
         slot = jnp.arange(s_cache)
         pos_c = pos[:, None]                                 # [B,1]

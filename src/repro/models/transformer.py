@@ -88,7 +88,8 @@ def _maybe_systolic_mlp(lp_mlp, h, cfg: ModelConfig):
             return cm.systolic_ffn(
                 h.astype(dt), lp_mlp["w_gate"].astype(dt),
                 lp_mlp["w_up"].astype(dt), lp_mlp["w_down"].astype(dt),
-                mesh=ctx.mesh, mode=cfg.systolic_mode)
+                mesh=ctx.mesh, mode=cfg.systolic_mode,
+                use_kernel=cfg.use_kernel)
     return apply_mlp(lp_mlp, h, cfg)
 
 

@@ -59,6 +59,19 @@ for mode in ("baseline", "sw", "xqueue", "qlr"):
     err = max(float(jnp.abs(o1 - ref1).max()), float(jnp.abs(o2 - ref2).max()))
     record(f"ag_matmul_{mode}", err < 1e-4, err)
 
+# fused tile-kernel local MAC, per-hop partials through the Pallas path
+def body_k(xl, w1_, w2_):
+    o1, o2 = ring_ag_matmul(xl, [w1_, w2_], topo, "qlr", use_kernel=True)
+    return o1, o2
+fn = jax.jit(shard_map(
+    body_k, mesh=mesh,
+    in_specs=(P(None, "model", None), P(None, None), P(None, None)),
+    out_specs=(P(None, None, None), P(None, None, None)),
+    check_vma=False))
+o1, o2 = fn(x, w1, w2)
+err = max(float(jnp.abs(o1 - ref1).max()), float(jnp.abs(o2 - ref2).max()))
+record("ag_matmul_qlr_kernel", err < 1e-4, err)
+
 # --- ring_matmul_rs vs reference -------------------------------------------
 xh = jax.random.normal(k4, (B, S, F), jnp.float32)
 wd = jax.random.normal(k2, (F, D), jnp.float32)
@@ -76,6 +89,15 @@ for mode in ("baseline", "sw", "xqueue", "qlr"):
     err = float(jnp.abs(y - ref).max())
     record(f"matmul_rs_{mode}", err < 1e-4, err)
 
+fn = jax.jit(shard_map(
+    lambda xl, w: ring_matmul_rs(xl, w, topo, "qlr", use_kernel=True),
+    mesh=mesh,
+    in_specs=(P(None, None, "model"), P("model", None)),
+    out_specs=P(None, "model", None),
+    check_vma=False))
+err = float(jnp.abs(fn(xh, wd) - ref).max())
+record("matmul_rs_qlr_kernel", err < 1e-4, err)
+
 # --- cannon 2x2 (use 4-device 'model' axis as 2x2 grid) ---------------------
 rows = cols = 2
 rt = torus_shift("model", rows, cols, direction="right")
@@ -92,25 +114,56 @@ from repro.core.topology import Topology
 left = Topology("left", "model", 4, tuple((d, s) for s, d in rt.perm))
 up = Topology("up", "model", 4, tuple((d, s) for s, d in ct.perm))
 
-def cbody(al, bl):
-    # al: A tile [M/rows, K/cols] (grid (r,c) holds A[r, c])
-    # bl: B tile [K/rows, N/cols]
-    return cannon_matmul(al[0], bl[0], left, up, rows, cols, "qlr")[None]
+def make_cbody(mode, use_kernel=False):
+    def cbody(al, bl):
+        # al: A tile [M/rows, K/cols] (grid (r,c) holds A[r, c])
+        # bl: B tile [K/rows, N/cols]
+        return cannon_matmul(al[0], bl[0], left, up, rows, cols, mode,
+                             use_kernel=use_kernel)[None]
+    return cbody
+
+def gather_c(c_t):
+    c = np.zeros((M, N), np.float32)
+    for r in range(rows):
+        for cc in range(cols):
+            c[r * M // rows:(r + 1) * M // rows,
+              cc * N // cols:(cc + 1) * N // cols] = \
+                np.asarray(c_t[r * cols + cc])
+    return c
 
 # lay out tiles: reshape A to [rows, cols, m, k] then index by device id
 a_t = a.reshape(rows, M // rows, cols, K // cols).swapaxes(1, 2).reshape(4, M // rows, K // cols)
 b_t = b.reshape(rows, K // rows, cols, N // cols).swapaxes(1, 2).reshape(4, K // rows, N // cols)
-fn = jax.jit(shard_map(
-    cbody, mesh=mesh, in_specs=(P("model"), P("model")),
-    out_specs=P("model"), check_vma=False))
-c_t = fn(a_t, b_t)
-c = np.zeros((M, N), np.float32)
-for r in range(rows):
-    for cc in range(cols):
-        c[r * M // rows:(r + 1) * M // rows, cc * N // cols:(cc + 1) * N // cols] = \
-            np.asarray(c_t[r * cols + cc])
-err = float(np.abs(c - np.asarray(ref_c)).max())
-record("cannon_2x2", err < 1e-4, err)
+
+# mode matrix: the skew hops must honor every requested link mode (the bug
+# was a hardcoded qlr hop inside _masked_rot), with and without the fused
+# Pallas tile kernel as the local MAC
+for mode in ("sw", "xqueue", "qlr"):
+    for use_kernel in (False, True):
+        fn = jax.jit(shard_map(
+            make_cbody(mode, use_kernel), mesh=mesh,
+            in_specs=(P("model"), P("model")),
+            out_specs=P("model"), check_vma=False))
+        c = gather_c(fn(a_t, b_t))
+        err = float(np.abs(c - np.asarray(ref_c)).max())
+        tag = f"cannon_2x2_{mode}" + ("_kernel" if use_kernel else "")
+        record(tag, err < 1e-4, err)
+
+# skew hops are FaultSpec-reachable: a corrupt fault on the skew hop index
+# (t0 = n-1 = 1 for the 2x2 fold) must poison the result. NaN does not
+# survive XLA's max-reduce, so detect via isfinite, not a max-diff.
+from repro.core import faults
+
+spec = faults.FaultSpec(kind="corrupt", hop=rows - 1, device=3, seed=7)
+with faults.inject(spec):
+    fn_f = jax.jit(shard_map(
+        make_cbody("qlr"), mesh=mesh,
+        in_specs=(P("model"), P("model")),
+        out_specs=P("model"), check_vma=False))
+    c_f = fn_f(a_t, b_t)
+record("cannon_skew_fault_reachable",
+       not bool(jnp.isfinite(c_f).all()),
+       f"finite={bool(jnp.isfinite(c_f).all())}")
 
 # --- systolic_ffn vs baseline swiglu ----------------------------------------
 D2, F2 = 8, 16

@@ -150,3 +150,137 @@ def test_flash_attention_gqa():
     r = attention_ref(qf, kf, vf).reshape(b, h, s, d).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=2e-4,
                                atol=2e-4)
+
+
+# ------------------------------------ hop-fused flash kernel (carried state)
+def _zero_state(b, h, sq, hd):
+    return (jnp.full((b, h, sq), -1e30, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, hd), jnp.float32))
+
+
+@pytest.mark.parametrize("window", [0, 37])
+@pytest.mark.parametrize("kvh", [4, 2])
+@pytest.mark.parametrize("s", [192, 256])   # 192 = non-tiling under bq=128
+def test_flash_hop_vs_block_update(window, kvh, s):
+    """Multi-hop carried state == ring_attention._block_update, over
+    causal x window x GQA x non-tiling S."""
+    from repro.core.ring_attention import _block_update
+    from repro.kernels.flash_attention.ops import flash_hop
+    b, h, hd = 2, 4, 16
+    sq = t = s // 2                               # two hops of half the keys
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    q = jax.random.normal(ks[0], (b, sq, h, hd), jnp.float32)
+    blocks = [
+        (jax.random.normal(ks[1 + 2 * i], (b, t, kvh, hd), jnp.float32),
+         jax.random.normal(ks[2 + 2 * i], (b, t, kvh, hd), jnp.float32))
+        for i in range(2)
+    ]
+    scale = 1.0 / np.sqrt(hd)
+    q_off = sq                                    # pretend we are shard 1
+    q_pos = q_off + jnp.arange(sq)
+
+    st_j = _zero_state(b, h, sq, hd)
+    st_k = _zero_state(b, h, sq, hd)
+    for i, (kb, vb) in enumerate(blocks):
+        k_off = i * t
+        st_j = _block_update(st_j, q.astype(jnp.float32), kb, vb, q_pos,
+                             k_off + jnp.arange(t), causal=True,
+                             window=window, scale=scale, num_heads=h)
+        st_k = flash_hop(q, kb, vb, st_k, q_offset=q_off, k_offset=k_off,
+                         causal=True, window=window)
+    for a, r in zip(st_k, st_j):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_flash_hop_padded_tail():
+    """Scalar k_len masks padded key positions exactly like the oracle."""
+    from repro.core.ring_attention import _block_update
+    from repro.kernels.flash_attention.ops import flash_hop
+    b, sq, t, h, hd = 2, 32, 48, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, h, hd), jnp.float32)
+    scale = 1.0 / np.sqrt(hd)
+    st_j = _block_update(_zero_state(b, h, sq, hd), q, k, v,
+                         jnp.arange(sq) + t, jnp.arange(t), causal=True,
+                         window=0, scale=scale, num_heads=h, k_len=t - 11)
+    st_k = flash_hop(q, k, v, _zero_state(b, h, sq, hd), q_offset=t,
+                     k_offset=0, k_len=t - 11, causal=True)
+    for a, r in zip(st_k, st_j):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_flash_hop_per_row_klen_decode():
+    """Per-row k_len (decode positions) == dense masked attention."""
+    from repro.kernels.flash_attention.ops import flash_hop
+    b, t, h, kvh, hd = 2, 64, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kvh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kvh, hd), jnp.float32)
+    pos = jnp.asarray([13, 57], jnp.int32)
+    m, l, acc = flash_hop(q, k, v, _zero_state(b, h, 1, hd), q_offset=0,
+                          k_offset=0, k_len=pos + 1, causal=False)
+    out = acc / l[..., None]
+    ke = jnp.repeat(k, h // kvh, axis=2)
+    ve = jnp.repeat(v, h // kvh, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q, ke) / np.sqrt(hd)
+    valid = (jnp.arange(t)[None, :] <= pos[:, None])[:, None, None, :]
+    p = jax.nn.softmax(jnp.where(valid, s, -1e30), axis=-1)
+    ref = jnp.einsum("bhst,bthd->bhsd", p, ve)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_flash_attention_vs_blocked_attention_nontiling():
+    """Self-contained form vs models/attention.blocked_attention on a
+    non-tiling sequence (S=192 under the 128 default), GQA + window."""
+    from repro.models.attention import blocked_attention
+    b, s, h, kvh, hd = 2, 192, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kvh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kvh, hd), jnp.float32)
+    for window in (0, 50):
+        y = flash_attention(q, k, v, causal=True, window=window)
+        r = blocked_attention(q, jnp.repeat(k, h // kvh, axis=2),
+                              jnp.repeat(v, h // kvh, axis=2), causal=True,
+                              window=window)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_kernel_wrappers_nontiling_no_crash():
+    """S=192 with the default 128 block used to hard-crash on the
+    clamp-then-assert; now it shrinks (flash) or falls back (matmul)."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    q = jax.random.normal(ks[0], (1, 192, 2, 16), jnp.float32)
+    y = flash_attention(q, q, q, causal=True)          # shrinks to bq=96
+    assert y.shape == (1, 192, 2, 16)
+    a = jax.random.normal(ks[1], (192, 160), jnp.float32)
+    b = jax.random.normal(ks[2], (160, 96), jnp.float32)
+    np.testing.assert_allclose(np.asarray(systolic_matmul(a, b)),
+                               np.asarray(a @ b), rtol=1e-4, atol=1e-2)
+    c = jax.random.normal(ks[0], (97, 64), jnp.float32)  # prime M: jnp path
+    d = jax.random.normal(ks[1], (64, 64), jnp.float32)
+    np.testing.assert_allclose(np.asarray(systolic_matmul(c, d)),
+                               np.asarray(c @ d), rtol=1e-4, atol=1e-2)
+
+
+def test_tile_matmul_acc_carry():
+    """The carry-in kernel: (acc + x @ w) with leading batch dims, exactly
+    matching the jnp promotion path."""
+    from repro.kernels.systolic_matmul.ops import tile_matmul
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    x = jax.random.normal(ks[0], (2, 3, 64, 160), jnp.float32)
+    w = jax.random.normal(ks[1], (160, 96), jnp.float32)
+    acc = jax.random.normal(ks[2], (2, 3, 64, 96), jnp.float32)
+    y = tile_matmul(x, w, acc)
+    ref = acc + jnp.einsum("...k,kn->...n", x, w)
+    assert y.dtype == ref.dtype
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4,
+                               atol=1e-2)

@@ -33,7 +33,12 @@ def test_collective_matmul_multidev():
     for prim in ("ag_matmul", "matmul_rs"):
         for mode in ("baseline", "sw", "xqueue", "qlr"):
             assert results[f"{prim}_{mode}"]["ok"]
-    assert results["cannon_2x2"]["ok"]
+        assert results[f"{prim}_qlr_kernel"]["ok"]
+    # cannon skew hops honor the requested link mode, jnp and kernel MACs
+    for mode in ("sw", "xqueue", "qlr"):
+        assert results[f"cannon_2x2_{mode}"]["ok"]
+        assert results[f"cannon_2x2_{mode}_kernel"]["ok"]
+    assert results["cannon_skew_fault_reachable"]["ok"]
     assert results["stream_order"]["ok"]
 
 
@@ -76,6 +81,12 @@ def test_ring_attention_multidev():
     assert results["ring_attn_gqa_qlr"]["ok"]
     assert results["ring_attn_window_qlr"]["ok"]
     assert results["ring_attn_noncausal_qlr"]["ok"]
+    # hop-fused Pallas path matches the jnp oracle per link mode, both duals
+    for mode in ("baseline", "sw", "xqueue", "qlr"):
+        assert results[f"ring_attn_kernel_{mode}"]["ok"]
+        assert results[f"ring_decode_kernel_{mode}"]["ok"]
+    assert results["ring_attn_kernel_window_qlr"]["ok"]
+    assert results["ring_attn_kernel_grad_qlr"]["ok"]
 
 
 def test_ring_moe_multidev():

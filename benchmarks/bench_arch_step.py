@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, emit_json, time_fn
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import build_model, split_tree
 
@@ -13,6 +13,7 @@ B, S = 2, 64
 
 
 def run(archs=None):
+    rows: dict = {}
     for arch in archs or ARCHS:
         cfg = get_smoke_config(arch)
         model = build_model(cfg)
@@ -42,6 +43,16 @@ def run(archs=None):
         us_dec = time_fn(step, params, cache, tok)
         emit(f"decode_step_{arch}", us_dec,
              f"tok_per_s={B / (us_dec / 1e6):.0f}")
+        # "tok_per_s" deliberately: throughput gating keys on "tok_s"
+        # substrings, and single-device step times are too jittery to gate
+        rows[arch] = {
+            "train_us_per_step": round(us_train, 1),
+            "train_tok_per_s": round(B * S / (us_train / 1e6), 1),
+            "decode_us_per_step": round(us_dec, 1),
+            "decode_tok_per_s": round(B / (us_dec / 1e6), 1),
+        }
+    emit_json("arch_step", {"archs": rows}, config={"batch": B, "seq": S})
+    return rows
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from benchmarks.common import emit, hlo_counts, time_fn
+from benchmarks.common import emit, emit_json, hlo_counts, time_fn
 from repro.core import energy
 from repro.core.fft import fft256_radix4, pipelined_fft
 from repro.launch.mesh import make_mesh
@@ -71,6 +71,15 @@ def run(batch: int = 64, n_micro: int = 8, n: int = 256):
          f"modeled_gops_w={rep2.gops_per_w:.0f};util_model=0.95")
     emit("cfft_energy_ratio", us_sys,
          f"modeled_gain={rep2.gops_per_w / rep.gops_per_w:.2f}x")
+    emit_json("cfft", {
+        "bl": {"us_per_call": round(us_bl, 1),
+               "n_collectives": counts["n_collectives"],
+               "modeled_gops_w": round(rep.gops_per_w, 1)},
+        "qlr": {"us_per_call": round(us_sys, 1),
+                "n_collectives": counts2["n_collectives"],
+                "modeled_gops_w": round(rep2.gops_per_w, 1)},
+        "modeled_energy_gain": round(rep2.gops_per_w / rep.gops_per_w, 3),
+    }, config={"batch": batch, "n_micro": n_micro, "n": n})
     return {"bl": us_bl, "qlr": us_sys}
 
 

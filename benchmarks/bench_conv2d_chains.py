@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, emit_json, time_fn
 from repro.core import energy
 from repro.core.halo import conv2d_3x3_local, conv2d_ref, conv2d_systolic
 from repro.core.pipeline import bubble_fraction, pipelined
@@ -30,6 +30,7 @@ def run(h: int = 256, w: int = 128, n_dev: int = 8, n_micro: int = 16):
     key = jax.random.PRNGKey(0)
     kern = jax.random.normal(jax.random.PRNGKey(1), (3, 3), jnp.float32)
     results = {}
+    rows: dict = {}
 
     # baseline: halo conv across all PEs (steady-state reference)
     x = jax.device_put(jax.random.normal(key, (h, w), jnp.float32),
@@ -39,6 +40,7 @@ def run(h: int = 256, w: int = 128, n_dev: int = 8, n_micro: int = 16):
     us = time_fn(base_fn, x, kern)
     emit("conv2d_chains_baseline", us, "bubble=0.00;chains=all-compute")
     results["baseline"] = us
+    rows["baseline"] = {"us_per_call": round(us, 1), "bubble": 0.0}
 
     # pipelined chains: stage i convolves its row band of each microbatch
     # image strip; k chains = k independent pipelines of depth n_dev/k
@@ -60,6 +62,9 @@ def run(h: int = 256, w: int = 128, n_dev: int = 8, n_micro: int = 16):
             # degenerate chain = data parallel; measure baseline-style
             emit(f"conv2d_chains_{n_chains}", results["baseline"],
                  f"bubble={frac:.3f};stages=1;note=data-parallel-limit")
+            rows[f"chains_{n_chains}"] = {
+                "us_per_call": round(results["baseline"], 1),
+                "bubble": round(frac, 4), "stages": 1}
             continue
         fn = pipelined(stage_fn, mesh, "pe", n_micro, mode="qlr",
                        n_chains=n_chains)
@@ -77,6 +82,12 @@ def run(h: int = 256, w: int = 128, n_dev: int = 8, n_micro: int = 16):
         emit(f"conv2d_chains_{n_chains}", us,
              f"bubble={frac:.3f};stages={n_stages};"
              f"modeled_gops_w={rep.gops_per_w:.0f}")
+        rows[f"chains_{n_chains}"] = {
+            "us_per_call": round(us, 1), "bubble": round(frac, 4),
+            "stages": n_stages, "modeled_gops_w": round(rep.gops_per_w, 1)}
+    emit_json("conv2d_chains", {"rows": rows},
+              config={"h": h, "w": w, "n_devices": n_dev,
+                      "n_micro": n_micro})
     return results
 
 

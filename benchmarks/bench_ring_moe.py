@@ -24,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from benchmarks.common import emit, emit_json, hlo_counts, time_fn
 from repro.configs.base import ModelConfig
-from repro.core import energy
+from repro.core import energy, topology
 from repro.core.ring_moe import MODES, systolic_ring_moe
 from repro.launch.mesh import make_mesh
 from repro.models import moe as moe_lib
@@ -55,19 +55,28 @@ def run(n_dev: int = 8, topks=(1, 2, 4), e: int = 8, s: int = 256,
         out_bytes = b * e * cap * d * 4
 
         ref = None
-        for mode in MODES:
-            def fn(p, x, m=mode):
+        # link-mode rows, plus the fused-kernel expert FFN (tile matmul on
+        # a snake_fold expert placement — the topology/kernel axes the
+        # autotuner sweeps)
+        variants = [(m, False, None, m) for m in MODES]
+        variants.append(
+            ("qlr", True,
+             topology.resolve_safe("snake_fold", "model", n_dev),
+             "qlr_kernel"))
+        for mode, use_kernel, topo, tag in variants:
+            def fn(p, x, m=mode, uk=use_kernel, tp=topo):
                 logits = jnp.einsum("bsd,de->bse", x, p["router"])
                 weights, idx, _ = moe_lib._topk_routing(logits, cfg)
                 pos = moe_lib._positions_in_expert(idx, e)
                 return systolic_ring_moe(x, idx, pos, weights, p["w_gate"],
-                                         p["w_up"], p["w_down"], cap, mesh, m)
+                                         p["w_up"], p["w_down"], cap, mesh,
+                                         m, topo=tp, use_kernel=uk)
             fn = jax.jit(fn)
             y = fn(params, x)
             if ref is None:
                 ref = y
             err = float(jnp.abs(y - ref).max())
-            assert err < 1e-4, (mode, k, err)
+            assert err < 1e-4, (tag, k, err)
             us = time_fn(fn, params, x)
             counts = hlo_counts(fn, params, x)
             vol = tok_bytes + out_bytes
@@ -75,11 +84,11 @@ def run(n_dev: int = 8, topks=(1, 2, 4), e: int = 8, s: int = 256,
             shared = vol if mode == "baseline" else vol // n_dev
             acct = energy.account(energy.MEMPOOL, flops=flops,
                                   local_bytes=shared, remote_bytes=link_bytes)
-            emit(f"ring_moe_{mode}_k{k}", us,
+            emit(f"ring_moe_{tag}_k{k}", us,
                  f"ops={counts['total_ops']};"
                  f"colls={counts['n_collectives']};"
                  f"gopsw={acct.gops_per_w:.0f};pe={acct.pe_fraction:.2f}")
-            rows[f"{mode}_k{k}"] = {
+            rows[f"{tag}_k{k}"] = {
                 "us_per_call": round(us, 1),
                 "total_ops": counts["total_ops"],
                 "n_collectives": counts["n_collectives"],

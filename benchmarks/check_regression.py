@@ -1,12 +1,15 @@
 """Bench-regression gate: diff fresh BENCH_*.json against committed copies.
 
 CI regenerates the BENCH_*.json files on the PR's code, then compares
-each throughput leaf (any numeric key containing ``tok_s``) against the
+each gated leaf — any numeric key containing ``tok_s`` (throughput) or
+``speedup`` (the autotuner's tuned-vs-default ratios) — against the
 committed baseline snapshot: a fresh value more than ``--threshold``
-(default 25%) *below* the baseline fails the job. Non-throughput leaves
+(default 25%) *below* the baseline fails the job. Non-gated leaves
 (wall times, op counts, link stats) are reported but never gate — CI
 runners are too noisy for latency assertions, while a >25% tokens/s
-collapse on the same code+config means a real scheduling/step regression.
+collapse on the same code+config means a real scheduling/step regression,
+and a tuned plan falling 25% behind its own default means the tuner (or a
+stale cache entry) regressed.
 
   python -m benchmarks.check_regression --baseline /tmp/baseline \
       --fresh . BENCH_serve.json [BENCH_*.json ...]
@@ -21,7 +24,14 @@ import json
 import sys
 from pathlib import Path
 
-GATE_KEY = "tok_s"          # throughput leaves gate; everything else informs
+# leaves whose key contains one of these gate; everything else informs
+# ("tok_per_s" does NOT match "tok_s" — single-device step rows stay
+# informational)
+GATE_KEYS = ("tok_s", "speedup")
+
+
+def _gated(path: str) -> bool:
+    return any(k in path for k in GATE_KEYS)
 
 
 def _walk(node, prefix=""):
@@ -45,7 +55,7 @@ def compare(baseline: dict, fresh: dict, threshold: float):
     fresh_leaves = _walk(fresh)
     failures, checked = [], []
     for path, old in sorted(base_leaves.items()):
-        if GATE_KEY not in path or old <= 0:
+        if not _gated(path) or old <= 0:
             continue
         new = fresh_leaves.get(path)
         if new is None:
@@ -57,7 +67,7 @@ def compare(baseline: dict, fresh: dict, threshold: float):
             failures.append((path, old, new,
                              f"{100 * (1 - ratio):.1f}% regression"))
     new_leaves = [(path, val) for path, val in sorted(fresh_leaves.items())
-                  if GATE_KEY in path and path not in base_leaves]
+                  if _gated(path) and path not in base_leaves]
     return failures, checked, new_leaves
 
 
@@ -97,7 +107,7 @@ def main(argv=None) -> int:
             new_s = f"{new:.1f}" if new is not None else "missing"
             print(f"[FAIL] {name}:{path} {old:.1f} -> {new_s} ({why})")
         if not checked and not failures and not new_leaves:
-            print(f"[skip] {name}: no '{GATE_KEY}' leaves to gate on")
+            print(f"[skip] {name}: no {'/'.join(GATE_KEYS)} leaves to gate on")
         any_fail |= bool(failures)
     return 1 if any_fail else 0
 

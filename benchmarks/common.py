@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import json
 import re
-import time
 from pathlib import Path
 from typing import Callable
 
@@ -18,17 +17,13 @@ _COLLECTIVE_RE = re.compile(
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Best-of wall time per call in microseconds (post-compile)."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+    """Best-of wall time per call in microseconds (post-compile).
+
+    Delegates to ``repro.autotune.measure.time_fn`` — the same timer the
+    autotuner ranks plans with, so benchmark rows and tuning trials are
+    directly comparable."""
+    from repro.autotune import measure
+    return measure.time_fn(fn, *args, warmup=warmup, iters=iters)
 
 
 def hlo_counts(fn: Callable, *args) -> dict:

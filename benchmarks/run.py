@@ -26,6 +26,7 @@ BENCHES = {
     "benchmarks.bench_ring_moe": 8,          # expert-ring MoE dispatch
     "benchmarks.bench_serve": 8,             # ring-sharded KV decode serving
     "benchmarks.bench_guardrails": 8,        # checked links / probe overhead
+    "benchmarks.bench_autotune": 8,          # tuned-vs-default trajectory
     "benchmarks.bench_arch_step": 0,         # §VI-D per-arch summary
 }
 

@@ -1,0 +1,33 @@
+"""repro.autotune — measured (mode, topology, block, kernel) plan selection.
+
+The paper's shared-memory-mapped queues make systolic topology
+reconfiguration essentially free: re-pointing the queues IS the cost of
+switching a 16x16 torus to an 8x32 snake (Table II). This package treats
+that freedom as a tuning axis: enumerate the applicable (link mode x
+topology x block size x use_kernel) plans for an op/shape (space.py), time
+them as jitted trials with link-utilization as a secondary objective
+(measure.py), persist the winners keyed by op/shape/dtype/mesh (cache.py),
+and thread the chosen plan back into the model/serve configs (api.py,
+``Config.autotune``).
+
+Inside jit the lookup is cache-only (exact key, else nearest shape) — the
+online tuner runs from benchmarks/bench_autotune.py, which also emits the
+BENCH_autotune.json trajectory point.
+"""
+from repro.autotune.space import Plan, candidates
+from repro.autotune.cache import TuneCache, make_key
+from repro.autotune.api import (
+    apply_plan,
+    best_plan,
+    global_cache,
+    mesh_key,
+    set_cache_path,
+    tune,
+    tuned_cfg,
+)
+
+__all__ = [
+    "Plan", "candidates", "TuneCache", "make_key", "apply_plan",
+    "best_plan", "global_cache", "mesh_key", "set_cache_path", "tune",
+    "tuned_cfg",
+]

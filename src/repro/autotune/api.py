@@ -1,0 +1,124 @@
+"""Plan selection API: cache-first lookup, online sweeps, config threading.
+
+``best_plan`` is the single entry point. Model code calls it cache-only
+(``allow_tune=False`` — safe inside jit tracing: a miss just means the
+config defaults stand), while ``benchmarks/bench_autotune.py`` passes a
+builder and lets ``tune`` sweep the applicable plans.
+
+``tuned_cfg`` is the ``Config.autotune`` gate used by
+``models/attention.gqa_forward`` and ``models/moe.apply_moe``: look the op
+up, and when a plan is cached, rewrite the four systolic config fields via
+``apply_plan``. ``serve.sharded_cache.RingShardedBackend(plan=...)``
+threads a plan into the serving stack the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.autotune import measure
+from repro.autotune.cache import TuneCache, default_path
+from repro.autotune.space import Plan, candidates
+
+# relative wall-clock band treated as measurement noise: plans inside it
+# tie on time and are split by link bytes (the utilization objective)
+NOISE = 0.03
+
+_CACHE: Optional[TuneCache] = None
+
+
+def mesh_key(mesh) -> tuple:
+    """Mesh -> hashable ((axis, size), ...) cache-key component."""
+    return tuple(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def global_cache(path: Optional[str] = None) -> TuneCache:
+    """The process-wide cache (loaded lazily from ``default_path()``)."""
+    global _CACHE
+    if _CACHE is None or (path is not None and path != _CACHE.path):
+        _CACHE = TuneCache(path or default_path())
+    return _CACHE
+
+
+def set_cache_path(path: Optional[str]) -> TuneCache:
+    """Point the global cache at ``path`` (reloads; tests use tmp files)."""
+    global _CACHE
+    _CACHE = TuneCache(path)
+    return _CACHE
+
+
+def best_plan(op: str, shape, dtype, mesh, *, cache: Optional[TuneCache] = None,
+              allow_tune: bool = False, build=None,
+              plans: Optional[list] = None, warmup: int = 1,
+              iters: int = 3) -> Optional[Plan]:
+    """Measured plan for (op, shape, dtype, mesh), or None.
+
+    Ladder: exact cache hit (zero re-measurement), else nearest-shape hit
+    (also zero re-measurement), else — only when ``allow_tune`` and a
+    ``build`` callback are given — an online sweep that persists its
+    winner. Cache-only callers (model code inside jit) get None on a total
+    miss and keep their config defaults.
+    """
+    cache = cache if cache is not None else global_cache()
+    mk = mesh_key(mesh)
+    plan = cache.lookup(op, shape, str(dtype), mk)
+    if plan is not None:
+        return plan
+    if not allow_tune or build is None:
+        return None
+    plan, _ = tune(op, shape, dtype, mesh, build, cache=cache, plans=plans,
+                   warmup=warmup, iters=iters)
+    return plan
+
+
+def tune(op: str, shape, dtype, mesh, build, *,
+         cache: Optional[TuneCache] = None, plans: Optional[list] = None,
+         warmup: int = 1, iters: int = 3, save: bool = True,
+         noise: float = NOISE):
+    """Sweep the applicable plans for ``op`` and persist the winner.
+
+    ``build(plan) -> (fn, args)`` with ``fn`` un-jitted (measure jits it).
+    Primary objective: best-of wall time. Secondary: among plans within
+    ``noise`` of the fastest, fewest link payload bytes wins. Returns
+    (winner, {plan.label(): {"us", "bytes", ...}}).
+    """
+    cache = cache if cache is not None else global_cache()
+    n = mesh.devices.shape[list(mesh.axis_names).index("model")] \
+        if "model" in mesh.axis_names else int(mesh.devices.size)
+    if plans is None:
+        plans = candidates(op, n)
+    results = {}
+    for plan in plans:
+        results[plan.label()] = dict(measure.measure_plan(
+            build, plan, warmup=warmup, iters=iters), plan=plan)
+    timed = [r for r in results.values() if r["us"] != float("inf")]
+    assert timed, f"every candidate plan failed for {op} {shape}"
+    best_us = min(r["us"] for r in timed)
+    near = [r for r in timed if r["us"] <= best_us * (1.0 + noise)]
+    winner = min(near, key=lambda r: (r.get("bytes", 0.0), r["us"]))["plan"]
+    win = results[winner.label()]
+    cache.put(op, shape, str(dtype), mesh_key(mesh), winner,
+              us=win["us"], bytes=win.get("bytes", 0.0))
+    if save:
+        cache.save()
+    for r in results.values():
+        r.pop("plan", None)
+    return winner, results
+
+
+def apply_plan(cfg, plan: Plan):
+    """Rewrite a ModelConfig's four systolic fields from a plan."""
+    return dataclasses.replace(
+        cfg, systolic_mode=plan.mode, systolic_topology=plan.topology,
+        use_kernel=plan.use_kernel, kernel_block=plan.block)
+
+
+def tuned_cfg(cfg, op: str, shape, mesh):
+    """The ``Config.autotune`` gate: cache-only lookup, defaults on miss.
+
+    Called from model forward paths during tracing — never measures."""
+    if not getattr(cfg, "autotune", False):
+        return cfg
+    plan = best_plan(op, tuple(int(s) for s in shape), cfg.dtype, mesh,
+                     allow_tune=False)
+    return apply_plan(cfg, plan) if plan is not None else cfg

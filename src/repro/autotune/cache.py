@@ -1,0 +1,113 @@
+"""Persistent tuning cache — measured plans keyed by op/shape/dtype/mesh.
+
+Key scheme (DESIGN.md §10): ``op|d0xd1x...|dtype|axis0=n0,axis1=n1`` —
+everything that changes which plan wins. Lookup ladder:
+
+  1. exact key           -> cached plan, zero re-measurement;
+  2. nearest shape       -> same op/dtype/mesh entry minimizing L2 distance
+                            in log2-space over the shape dims (same rank
+                            only — a [B,S,D] activation never borrows from
+                            a [M,K] weight);
+  3. miss                -> None; the caller falls back to its config
+                            defaults or (outside jit) tunes online.
+
+The JSON file keeps the measured microseconds and link bytes next to each
+plan so `check_regression.py` can gate the whole trajectory, not just the
+winner's identity.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Optional
+
+from repro.autotune.space import Plan
+
+ENV_PATH = "REPRO_AUTOTUNE_CACHE"
+DEFAULT_FILENAME = "AUTOTUNE_CACHE.json"
+
+
+def default_path() -> str:
+    return os.environ.get(ENV_PATH, DEFAULT_FILENAME)
+
+
+def make_key(op: str, shape, dtype, mesh_shape) -> str:
+    """op + shape dims + dtype + mesh axis sizes -> one cache key."""
+    sh = "x".join(str(int(s)) for s in shape)
+    ms = ",".join(f"{a}={int(n)}" for a, n in mesh_shape)
+    return f"{op}|{sh}|{dtype}|{ms}"
+
+
+def _parse_key(key: str):
+    op, sh, dtype, ms = key.split("|")
+    shape = tuple(int(v) for v in sh.split("x")) if sh else ()
+    return op, shape, dtype, ms
+
+
+class TuneCache:
+    """Dict-of-entries with JSON persistence and the nearest-shape ladder.
+
+    entries[key] = {"plan": {...}, "us": float, "bytes": float,
+                    "default_us": float}   (extra fields pass through)
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: dict[str, dict] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # ------------------------------------------------------------- persist
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            data = json.load(f)
+        self.entries.update(data.get("entries", {}))
+        self.path = path
+
+    def save(self, path: Optional[str] = None) -> None:
+        path = path or self.path or default_path()
+        payload = {"version": 1, "entries": self.entries}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        self.path = path
+
+    # -------------------------------------------------------------- lookup
+    def put(self, op: str, shape, dtype, mesh_shape, plan: Plan,
+            **extra) -> str:
+        key = make_key(op, shape, dtype, mesh_shape)
+        self.entries[key] = {"plan": plan.to_dict(), **extra}
+        return key
+
+    def get_exact(self, op: str, shape, dtype, mesh_shape) -> Optional[Plan]:
+        e = self.entries.get(make_key(op, shape, dtype, mesh_shape))
+        return Plan.from_dict(e["plan"]) if e else None
+
+    def get_nearest(self, op: str, shape, dtype,
+                    mesh_shape) -> Optional[Plan]:
+        """Closest same-rank shape under the same op/dtype/mesh — log2-space
+        L2 over dims, so 4096 vs 2048 is as near as 64 vs 32."""
+        shape = tuple(int(s) for s in shape)
+        want = (op, str(dtype), ",".join(f"{a}={int(n)}"
+                                         for a, n in mesh_shape))
+        best, best_d = None, float("inf")
+        for key, e in self.entries.items():
+            kop, kshape, kdtype, kms = _parse_key(key)
+            if (kop, kdtype, kms) != want or len(kshape) != len(shape):
+                continue
+            d = sum((math.log2(max(a, 1)) - math.log2(max(b, 1))) ** 2
+                    for a, b in zip(kshape, shape))
+            if d < best_d:
+                best, best_d = e, d
+        return Plan.from_dict(best["plan"]) if best else None
+
+    def lookup(self, op: str, shape, dtype, mesh_shape) -> Optional[Plan]:
+        """The cache-only ladder: exact, else nearest, else None."""
+        plan = self.get_exact(op, shape, dtype, mesh_shape)
+        if plan is not None:
+            return plan
+        return self.get_nearest(op, shape, dtype, mesh_shape)
+
+    def __len__(self) -> int:
+        return len(self.entries)

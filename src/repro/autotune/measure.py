@@ -1,0 +1,84 @@
+"""Timed jitted trials — the canonical wall-clock timer for the repo.
+
+``time_fn`` is the single best-of-N timer both this tuner and the
+benchmark harness use (``benchmarks/common.time_fn`` delegates here).
+``measure_plan`` adds the secondary objective: total link payload bytes
+from ``obs/linkstats``, collected on one instrumented eager call — among
+plans whose times are within noise of each other, the one moving fewer
+bytes over the queues wins (better utilization of the shared-memory
+links).
+
+Every timed trial bumps a module counter so tests (and bench_autotune's
+zero-remeasure assertion) can prove a cache hit ran no measurements.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.obs import linkstats
+
+# count of timed trials since reset — the zero-remeasure witness
+_TRIALS = 0
+
+
+def reset_trials() -> None:
+    global _TRIALS
+    _TRIALS = 0
+
+
+def trial_count() -> int:
+    return _TRIALS
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Best-of-``iters`` wall microseconds for ``fn(*args)`` (block until
+    ready; ``warmup`` unmeasured calls absorb compilation)."""
+    global _TRIALS
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    _TRIALS += 1
+    return best * 1e6
+
+
+def link_bytes(fn, *args) -> float:
+    """Total queue payload bytes one call moves (hop + multicast traffic).
+
+    Runs ``fn`` once eagerly under a linkstats scope — the systolic
+    wrappers trace their instrumented variant iff a scope is armed, so the
+    jitted timing path above stays bit-identical. Returns 0.0 when the fn
+    records nothing (pure-local compute)."""
+    try:
+        with linkstats.collect(1) as sc:
+            jax.block_until_ready(fn(*args))
+        d = sc.stats.as_dict()
+        return float(sum(v for k, v in d.items() if k.startswith("bytes")))
+    except Exception:
+        return 0.0
+
+
+def measure_plan(build, plan, *, warmup: int = 1, iters: int = 3,
+                 with_bytes: bool = True) -> dict:
+    """Measure one plan. ``build(plan) -> (fn, args)`` with ``fn`` an
+    un-jitted callable; timing jits it, the byte probe traces it armed.
+
+    Returns {"us": best-of wall μs, "bytes": link payload bytes} — or
+    {"us": inf, "error": ...} when the plan fails to build/run, so sweeps
+    simply rank it last instead of aborting.
+    """
+    try:
+        fn, args = build(plan)
+        jfn = jax.jit(fn)
+        us = time_fn(jfn, *args, warmup=warmup, iters=iters)
+        out = {"us": us}
+        if with_bytes:
+            out["bytes"] = link_bytes(fn, *args)
+        return out
+    except Exception as e:  # inapplicable plan: rank last, keep sweeping
+        return {"us": float("inf"), "error": f"{type(e).__name__}: {e}"}

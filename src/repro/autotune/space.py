@@ -1,0 +1,94 @@
+"""Search space: (link mode x topology x block x use_kernel) with
+applicability gates.
+
+A Plan is the unit the cache stores and the models consume — four config
+fields that together pick one point of the paper's design space: which
+link emulation moves the operands, which permutation schedule the queues
+are pointed at, and whether/how the per-hop consume runs as a fused Pallas
+tile.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Optional
+
+from repro.core import topology as topo_lib
+
+MODES = ("baseline", "sw", "xqueue", "qlr")
+TOPOLOGIES = ("ring", "snake_fold", "torus2d", "cannon_grid")
+# cycle schedules only: ops whose streamed element must return home
+# (decode's stream_carry) or that place experts rather than sweep tiles
+CYCLE_TOPOLOGIES = ("ring", "snake_fold")
+BLOCKS = (0, 64, 128)
+
+# ops the tuner knows; each maps to the topology family it can ride
+OP_TOPOLOGIES = {
+    "matmul": TOPOLOGIES,
+    "attention": TOPOLOGIES,
+    "moe": CYCLE_TOPOLOGIES,
+    "decode": CYCLE_TOPOLOGIES,
+    "serve": CYCLE_TOPOLOGIES,
+}
+
+
+@dataclass(frozen=True, order=True)
+class Plan:
+    """One tunable configuration: the four knobs a measured trial fixes."""
+    mode: str = "qlr"
+    topology: str = "ring"
+    block: int = 0
+    use_kernel: bool = False
+
+    def to_dict(self) -> dict:
+        return {"mode": self.mode, "topology": self.topology,
+                "block": int(self.block), "use_kernel": bool(self.use_kernel)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        return cls(mode=d.get("mode", "qlr"),
+                   topology=d.get("topology", "ring"),
+                   block=int(d.get("block", 0)),
+                   use_kernel=bool(d.get("use_kernel", False)))
+
+    def label(self) -> str:
+        k = f"k{self.block or ''}" if self.use_kernel else "jnp"
+        return f"{self.mode}/{self.topology}/{k}"
+
+
+DEFAULT_PLAN = Plan(mode="baseline", topology="ring", block=0,
+                    use_kernel=False)
+
+
+def candidates(op: str, n_devices: int, *,
+               modes: Iterable[str] = MODES,
+               topologies: Optional[Iterable[str]] = None,
+               blocks: Iterable[int] = (0,),
+               kernels: Iterable[bool] = (False, True)) -> list[Plan]:
+    """Enumerate the applicable plans for ``op`` on an ``n_devices`` ring.
+
+    Gates:
+      * topology family per op (grids need a valid even fold; decode/serve
+        and MoE ride cycle schedules only);
+      * ``baseline`` multicasts — the topology axis collapses to "ring";
+      * a block size only means something under ``use_kernel``.
+    """
+    assert op in OP_TOPOLOGIES, (op, tuple(OP_TOPOLOGIES))
+    topos = tuple(topologies) if topologies is not None else OP_TOPOLOGIES[op]
+    plans = []
+    seen = set()
+    for mode in modes:
+        for topo in topos:
+            if mode == "baseline" and topo != "ring":
+                continue
+            base = topo.partition(":")[0]
+            if base in ("torus2d", "cannon_grid") \
+                    and not topo_lib.grid_ok(n_devices):
+                continue
+            for use_kernel in kernels:
+                for block in (blocks if use_kernel else (0,)):
+                    p = Plan(mode=mode, topology=topo, block=int(block),
+                             use_kernel=bool(use_kernel))
+                    if p not in seen:
+                        seen.add(p)
+                        plans.append(p)
+    return plans

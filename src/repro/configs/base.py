@@ -109,6 +109,18 @@ class ModelConfig:
     # (flash-attention hop / tile matmul) instead of the jnp oracle —
     # interpret mode off-TPU, jnp fallback when shapes don't tile.
     use_kernel: bool = False
+    # Systolic schedule over the 'model' axis — the paper's free queue
+    # re-pointing: "ring" | "snake_fold" | "torus2d" | "cannon_grid",
+    # optionally ":RxC" to pin the fold (core/topology.resolve). Falls back
+    # to the +1 ring when the named schedule doesn't apply (odd grid fold,
+    # cycle-only decode).
+    systolic_topology: str = "ring"
+    # Pallas tile edge for the fused consume (0 -> kernel defaults).
+    kernel_block: int = 0
+    # Consult the persistent tuning cache (repro.autotune) for a measured
+    # (mode, topology, block, kernel) plan per op/shape. Cache-only at
+    # trace time — online tuning runs in benchmarks/bench_autotune.py.
+    autotune: bool = False
 
     # remat / scan
     remat: str = "full"            # none | full | selective

@@ -55,7 +55,7 @@ import jax.numpy as jnp
 
 from repro.compat import optimization_barrier
 from repro.core import faults
-from repro.core.topology import Topology
+from repro.core.topology import GridSchedule, Topology
 from repro.obs import linkstats
 
 MODES = ("sw", "xqueue", "qlr")
@@ -188,11 +188,16 @@ def _checked_hop(topo: Topology, x, mode: str, *, t, prev=None):
     return payload, health
 
 
-def stream(topo: Topology, x0, n_steps: int,
+def stream(topo, x0, n_steps: int,
            consume: Callable[[Any, Any, Any], Any], state0,
            mode: str = "qlr", unroll: bool = True, checked: bool = False):
     """Drive a systolic stream: per step, consume the current operand and
     forward it along the topology.
+
+    ``topo`` is a Topology or a :class:`~repro.core.topology.GridSchedule`
+    (2-D torus / Cannon orders): grid schedules change their permutation
+    per hop — free queue re-pointing — so they run as an unrolled Python
+    loop instead of a scan (lax.scan cannot vary a ppermute per step).
 
     consume(state, operand, step_index) -> state.
     qlr: hop(t) is independent of consume(t) -> overlappable.
@@ -203,6 +208,9 @@ def stream(topo: Topology, x0, n_steps: int,
     per-hop (tag_err, csum_err) flags. Unchecked returns (state, buf).
     """
     assert mode in MODES, mode
+    if isinstance(topo, GridSchedule):
+        return _stream_grid(topo, x0, n_steps, consume, state0, mode,
+                            checked)
 
     def body(carry, t):
         buf, state = carry
@@ -224,6 +232,47 @@ def stream(topo: Topology, x0, n_steps: int,
             unroll=n_steps if unroll else 1)
     linkstats.record_hops(x0, n_steps, health=health if checked else None)
     if checked:
+        return state, buf, health
+    return state, buf
+
+
+def _stream_grid(sched: GridSchedule, x0, n_steps: int, consume, state0,
+                 mode: str, checked: bool):
+    """`stream` over a per-hop permutation sequence (torus2d / Cannon).
+
+    Runs as a Python loop — each hop may ride a different Topology, which
+    a lax.scan body cannot express. The skew permutation (Cannon start
+    offsets), when present, hops once *before* consume 0 with sequence
+    number ``n_steps`` so fault injection / checked links can target it
+    separately from the main circuit; its health folds into hop 0's row
+    (keeping the documented [n_steps, 2] health shape).
+    """
+    assert n_steps == len(sched.hops) == sched.size, (n_steps, sched)
+    buf, state = x0, state0
+    skew_health = None
+    if sched.skew is not None:
+        moved = hop(sched.skew, buf, mode, t=n_steps, checked=checked)
+        if checked:
+            buf, skew_health = moved
+        else:
+            buf = moved
+    healths = []
+    for t, topo_t in enumerate(sched.hops):
+        if mode == "qlr":
+            nxt = hop(topo_t, buf, mode, t=t, checked=checked)
+            state = consume(state, buf, t)       # … compute overlaps
+        else:
+            state = consume(state, buf, t)
+            state, buf = optimization_barrier((state, buf))
+            nxt = hop(topo_t, buf, mode, t=t, checked=checked)
+        if checked:
+            nxt, health = nxt
+            healths.append(health)
+        buf = nxt
+    if checked:
+        if skew_health is not None:
+            healths[0] = healths[0] + skew_health
+        health = jnp.stack(healths)
         return state, buf, health
     return state, buf
 
@@ -256,6 +305,11 @@ def stream_carry(topo: Topology, static0, carry0, n_steps: int,
     counts summed over the two queues.
     """
     assert mode in MODES, mode
+    if isinstance(topo, GridSchedule):
+        raise TypeError(
+            "stream_carry needs a single-cycle Topology (elements must "
+            "return home after n hops); grid schedules do not qualify — "
+            "decode rides ring/snake_fold only")
 
     def body(cur, t):
         static, carry = cur

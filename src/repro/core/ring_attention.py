@@ -86,7 +86,7 @@ def _block_update(state, q32, k_blk, v_blk, q_pos, k_pos, *, causal: bool,
     return m_new, l_new, acc_new
 
 
-def ring_attention(q_local, k_local, v_local, topo: Topology,
+def ring_attention(q_local, k_local, v_local, topo,
                    mode: str = "qlr", *, causal: bool = True,
                    window: int = 0, use_kernel: bool = False):
     """shard_map-local systolic attention over one ring topology.
@@ -95,7 +95,11 @@ def ring_attention(q_local, k_local, v_local, topo: Topology,
     k_local/v_local: [B, s_local, Kv, hd] — this device's K/V shard, which
                     is pushed around the ring; at hop t the buffer holds the
                     shard of origin ``_source_table(topo)[my, t]`` and its
-                    global positions drive the causal/window mask.
+                    global positions drive the causal/window mask. ``topo``
+                    may be a 2-D GridSchedule (torus2d / cannon_grid): the
+                    online-softmax fold is arrival-order independent
+                    (position-based masks), so any visit order that covers
+                    every shard exactly once gives the same output.
     use_kernel:     per-hop consume runs as one fused Pallas launch
                     (``kernels/flash_attention.flash_hop``) instead of the
                     jnp ``_block_update`` oracle — the paper's PE-level
@@ -176,17 +180,22 @@ def ring_attn_applicable(q, k, mesh: Mesh) -> bool:
 
 def systolic_ring_attention(q, k, v, mesh: Mesh, mode: str = "qlr", *,
                             causal: bool = True, window: int = 0,
-                            use_kernel: bool = False):
+                            use_kernel: bool = False, topo=None):
     """Ring attention over the 'model' axis: sequence sharded, heads whole.
 
     q: [B,S,H,hd], k/v: [B,S,Kv,hd] (global arrays). Returns the full
     [B,S,H,hd] fp32 attention output, sequence-sharded over 'model' (each
     device owns its query shard's rows — the output-stationary layout).
+    ``topo`` overrides the default +1 ring with any schedule over the
+    'model' axis (Topology or 2-D GridSchedule) — the free queue
+    re-pointing of the paper.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     n = sizes["model"]
     batch = _batch_axes(mesh)
-    topo = ring("model", n)
+    if topo is None:
+        topo = ring("model", n)
+    assert topo.size == n, (topo.size, n)
     spec = P(batch if batch else None, "model", None, None)
 
     def body(q_l, k_l, v_l):
@@ -323,17 +332,21 @@ def ring_decode_applicable(q, k_cache, mesh: Mesh) -> bool:
 
 
 def systolic_ring_decode(q, k_cache, v_cache, pos, mesh: Mesh,
-                         mode: str = "qlr", *, use_kernel: bool = False):
+                         mode: str = "qlr", *, use_kernel: bool = False,
+                         topo=None):
     """Ring-sharded decode attention over the 'model' axis.
 
     q: [B,1,H,hd]; k_cache/v_cache: [B,S,Kv,hd] (global); pos: [B]. The
     cache is sequence-sharded over the ring (each device's resident slots),
     the decode batch is sharded over (batch axes x 'model') so each device
     streams its own query slice. Returns [B,1,H,hd] fp32, batch-sharded the
-    same way.
+    same way. ``topo`` must be a single full cycle (stream_carry rides the
+    query+state around and home) — ring or snake_fold, not a GridSchedule.
     """
     batch = _batch_axes(mesh)
-    topo = ring("model", mesh.shape["model"])
+    if topo is None:
+        topo = ring("model", mesh.shape["model"])
+    assert topo.size == mesh.shape["model"]
     q_spec = P(batch + ("model",), None, None, None)
     kv_spec = P(batch if batch else None, "model", None, None)
     pos_spec = P(batch if batch else None)

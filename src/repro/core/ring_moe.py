@@ -42,19 +42,39 @@ from repro.obs import linkstats
 from repro.core import queues
 from repro.core.collective_matmul import _batch_axes, _source_table
 from repro.core.topology import Topology, ring
+from repro.kernels.systolic_matmul import ops as tile_ops
 
 MODES = ("baseline",) + queues.MODES
 
 
-def _expert_ffn(xbuf, wg, wu, wd):
+def _expert_ffn(xbuf, wg, wu, wd, *, use_kernel: bool = False,
+                block: int = 0):
     """Local expert SwiGLU over the capacity buffer.
 
     xbuf: [B, e_local * C, D]; wg/wu: [e_local, D, F]; wd: [e_local, F, D].
     Returns [B, e_local * C, D] in the promoted compute dtype.
+
+    With ``use_kernel`` each expert's three projections run through the
+    Pallas ``tile_matmul`` (the capacity rows flattened into M, the carried
+    accumulator folding the K-tile partials) — the per-PE fused consume of
+    DESIGN.md §6 applied to the weight-stationary expert shard.
     """
     b, ec, d = xbuf.shape
     e_l = wg.shape[0]
     xe = xbuf.reshape(b, e_l, ec // e_l, d)
+    if use_kernel:
+        bk = {}
+        if block:
+            bk = dict(bm=block, bn=block, bk=block)
+        outs = []
+        for e in range(e_l):
+            x2 = xe[:, e].reshape(b * (ec // e_l), d)     # (B,C) -> M
+            gate = tile_ops.tile_matmul(x2, wg[e], **bk)
+            up = tile_ops.tile_matmul(x2, wu[e], **bk)
+            h = jax.nn.silu(gate) * up
+            outs.append(tile_ops.tile_matmul(h, wd[e], **bk)
+                        .reshape(b, ec // e_l, d))
+        return jnp.stack(outs, axis=1).reshape(b, ec, d)
     gate = jnp.einsum("becd,edf->becf", xe, wg)
     up = jnp.einsum("becd,edf->becf", xe, wu)
     h = jax.nn.silu(gate) * up
@@ -62,8 +82,9 @@ def _expert_ffn(xbuf, wg, wu, wd):
     return out.reshape(b, ec, d)
 
 
-def ring_moe(x_blk, idx_blk, pos_blk, w_blk, wg, wu, wd, topo: Topology,
-             cap: int, mode: str = "qlr"):
+def ring_moe(x_blk, idx_blk, pos_blk, w_blk, wg, wu, wd, topo,
+             cap: int, mode: str = "qlr", *, use_kernel: bool = False,
+             block: int = 0):
     """shard_map-local expert-ring MoE over one ring topology.
 
     x_blk:   [B, s_local, D]  — this device's token block (streamed).
@@ -115,7 +136,8 @@ def ring_moe(x_blk, idx_blk, pos_blk, w_blk, wg, wu, wd, topo: Topology,
         poss = jax.lax.all_gather(pos_blk, topo.axis, axis=1, tiled=True)
         linkstats.record_multicast((x_blk, idx_blk, pos_blk), fan_in=n)
         xbuf = scatter_block(xbuf0, xs, idxs, poss)
-        out_e = _expert_ffn(xbuf, wg, wu, wd)
+        out_e = _expert_ffn(xbuf, wg, wu, wd, use_kernel=use_kernel,
+                            block=block)
         # ... and every owner reads every expert's outputs
         outs = jax.lax.all_gather(out_e, topo.axis, axis=0, tiled=False)
         linkstats.record_multicast(out_e, fan_in=n)
@@ -135,7 +157,8 @@ def ring_moe(x_blk, idx_blk, pos_blk, w_blk, wg, wu, wd, topo: Topology,
                             dispatch_consume, xbuf0, mode)
 
     # ---- local expert FFN (weight-stationary) -----------------------------
-    out_e = _expert_ffn(xbuf, wg, wu, wd)
+    out_e = _expert_ffn(xbuf, wg, wu, wd, use_kernel=use_kernel,
+                        block=block)
 
     # ---- pass 2: expert outputs ride the ring back to the token owners ----
     def combine_consume(y, out_src, t):
@@ -174,25 +197,31 @@ def ring_moe_applicable(cfg, x, mesh: Mesh) -> bool:
 
 
 def systolic_ring_moe(x, idx, pos, weights, wg, wu, wd, cap: int,
-                      mesh: Mesh, mode: str = "qlr"):
+                      mesh: Mesh, mode: str = "qlr", *, topo=None,
+                      use_kernel: bool = False, block: int = 0):
     """Expert-ring MoE over the 'model' axis: experts sharded (resident),
     tokens streamed.
 
     x: [B,S,D]; idx/pos: [B,S,K] int32; weights: [B,S,K] (global arrays,
     routing already resolved — see models.moe.apply_moe); wg/wu: [E,D,F],
     wd: [E,F,D]. Returns y [B,S,D] fp32, sequence-sharded over 'model'.
+    ``topo`` re-points the expert ring (e.g. a snake_fold placement);
+    scatter/gather address by origin id, so any full-coverage schedule
+    combines identically.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     n = sizes["model"]
     batch = _batch_axes(mesh)
-    topo = ring("model", n)
+    if topo is None:
+        topo = ring("model", n)
+    assert topo.size == n, (topo.size, n)
     bspec = batch if batch else None
     tok_spec = P(bspec, "model", None)
     w_spec = P("model", None, None)
 
     def body(x_l, idx_l, pos_l, w_l, wg_l, wu_l, wd_l):
         return ring_moe(x_l, idx_l, pos_l, w_l, wg_l, wu_l, wd_l, topo,
-                        cap, mode)
+                        cap, mode, use_kernel=use_kernel, block=block)
 
     return linkstats.shard_call(
         body, mesh,

@@ -12,10 +12,27 @@ Supported (all used by the paper's kernels):
               Table III; chain heads are the "mover PEs")
   torus rows/cols — a 1-D axis folded into an RxC grid (matmul 16x16 vs
               8x32 grid remapping, Table II)
+  snake_fold — single cycle in boustrophedon order over an RxC fold: the
+              paper's wide-grid remap, used as the MoE expert placement
+              (consecutive expert shards are row-local neighbors)
+  torus2d   — a :class:`GridSchedule`: per-hop row/col shift pairs that
+              sweep an RxC fold row-by-row (Cannon-style 2-D ring order)
+  cannon_grid — torus2d plus the Cannon start skew as ONE grid permutation
+              (row r pre-shifted left r), instead of r masked ring hops
+
+A :class:`GridSchedule` is the 2-D generalization of a Topology: a
+sequence of per-hop permutations (plus an optional skew permutation
+applied before the first consume). Re-pointing queues between hops costs
+nothing in the paper's model, so a schedule that changes its permutation
+per hop is exactly as "reconfigurable" as a fixed ring — the autotuner
+(repro.autotune) treats both as points of one search axis.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional, Union
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -65,7 +82,7 @@ def snake_ring(axis: str, rows: int, cols: int) -> Topology:
 
 
 def torus_shift(axis: str, rows: int, cols: int, *, direction: str) -> Topology:
-    """Fold a 1-D device axis into an RxC grid; shift right or down."""
+    """Fold a 1-D device axis into an RxC grid; shift right/left/down/up."""
     size = rows * cols
     perm = []
     for r in range(rows):
@@ -73,9 +90,271 @@ def torus_shift(axis: str, rows: int, cols: int, *, direction: str) -> Topology:
             i = r * cols + c
             if direction == "right":
                 j = r * cols + (c + 1) % cols
+            elif direction == "left":
+                j = r * cols + (c - 1) % cols
             elif direction == "down":
                 j = ((r + 1) % rows) * cols + c
+            elif direction == "up":
+                j = ((r - 1) % rows) * cols + c
             else:
                 raise ValueError(direction)
             perm.append((i, j))
     return Topology(f"torus{rows}x{cols}_{direction}", axis, size, tuple(perm))
+
+
+def snake_fold(axis: str, rows: int, cols: int) -> Topology:
+    """MoE expert placement on an RxC fold: the snake_ring cycle under its
+    autotuner-facing name. Expert shard k lives at snake position k, so a
+    full dispatch/combine circuit only ever crosses row boundaries at the
+    RxC turns — every other hop is a tile-local link."""
+    base = snake_ring(axis, rows, cols)
+    return Topology(f"snakefold{rows}x{cols}", axis, base.size, base.perm)
+
+
+def cannon_skew(axis: str, rows: int, cols: int, *,
+                which: str = "rows") -> Topology:
+    """Cannon's start skew as ONE grid permutation.
+
+    which="rows": tile (r, c) moves left r columns — device (r, c) ends up
+    holding the element of origin (r, (c + r) % C): the A-operand skew.
+    which="cols": tile (r, c) moves up c rows (the B-operand skew).
+    Round-trips after C (resp. R) applications — the skew of row r is a
+    cyclic shift by r, so C shifts compose to a full turn.
+    """
+    size = rows * cols
+    perm = []
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if which == "rows":
+                j = r * cols + (c - r) % cols
+            elif which == "cols":
+                j = ((r - c) % rows) * cols + c
+            else:
+                raise ValueError(which)
+            perm.append((i, j))
+    return Topology(f"cannonskew{rows}x{cols}_{which}", axis, size,
+                    tuple(perm))
+
+
+# ---------------------------------------------------------------------------
+# 2-D grid schedules: per-hop permutation sequences
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GridSchedule:
+    """A systolic schedule whose permutation may change per hop.
+
+    ``hops[t]`` is the Topology the buffer rides after consume ``t``;
+    ``skew`` (optional) is applied once before the first consume (the
+    Cannon start offsets). ``row``/``col`` expose the constituent shift
+    pairs. All hops share one mesh ``axis`` — re-pointing queues between
+    hops is free in the paper's model, so per-hop permutation changes cost
+    the same as a fixed ring.
+    """
+    name: str
+    axis: str
+    rows: int
+    cols: int
+    hops: tuple[Topology, ...]
+    skew: Optional[Topology] = None
+    row: Optional[Topology] = None
+    col: Optional[Topology] = None
+
+    @property
+    def size(self) -> int:
+        return self.rows * self.cols
+
+
+AnySchedule = Union[Topology, GridSchedule]
+
+
+def _grid_hops(axis: str, rows: int, cols: int) -> tuple[Topology, ...]:
+    """The torus2d hop order: sweep each row fully, then step down.
+
+    Row phases alternate direction (boustrophedon in hop space): with an
+    even row count the net displacement after all R*(C-1) row hops cancels
+    and the final R down-hops close the cycle, so buffers return home —
+    the same invariant a 1-D ring gives `stream` callers for free.
+    """
+    right = torus_shift(axis, rows, cols, direction="right")
+    left = torus_shift(axis, rows, cols, direction="left")
+    down = torus_shift(axis, rows, cols, direction="down")
+    hops: list[Topology] = []
+    for r in range(rows):
+        hops += [right if r % 2 == 0 else left] * (cols - 1)
+        hops.append(down)
+    return tuple(hops)
+
+
+def torus2d(axis: str, rows: int, cols: int) -> GridSchedule:
+    """Cannon-style 2-D ring order on an RxC fold: row+col shift pairs."""
+    return GridSchedule(
+        name=f"torus2d{rows}x{cols}", axis=axis, rows=rows, cols=cols,
+        hops=_grid_hops(axis, rows, cols),
+        row=torus_shift(axis, rows, cols, direction="right"),
+        col=torus_shift(axis, rows, cols, direction="down"))
+
+
+def cannon_grid(axis: str, rows: int, cols: int) -> GridSchedule:
+    """torus2d with Cannon's skewed RxC start offsets: row r begins its
+    sweep shifted by r, so the per-hop arrival order differs per row (the
+    diagonal wavefront of Cannon's algorithm) while coverage — each device
+    sees every shard exactly once — is unchanged."""
+    base = torus2d(axis, rows, cols)
+    return GridSchedule(
+        name=f"cannon{rows}x{cols}", axis=axis, rows=rows, cols=cols,
+        hops=base.hops, skew=cannon_skew(axis, rows, cols, which="rows"),
+        row=base.row, col=base.col)
+
+
+# ---------------------------------------------------------------------------
+# schedule algebra: tables the ring kernels consume
+# ---------------------------------------------------------------------------
+
+
+def hop_topos(sched: AnySchedule, n_steps: int | None = None):
+    """The per-hop Topology sequence of a schedule (a plain Topology is a
+    constant sequence of length size, or ``n_steps`` when given)."""
+    if isinstance(sched, GridSchedule):
+        return list(sched.hops)
+    return [sched] * (sched.size if n_steps is None else n_steps)
+
+
+def _perm_array(topo: Topology) -> np.ndarray:
+    """dst[i] = where node i's element goes; identity off the perm."""
+    dst = np.arange(topo.size)
+    for s, d in topo.perm:
+        dst[s] = d
+    return dst
+
+
+def source_table(sched: AnySchedule) -> np.ndarray:
+    """[n, n] int32 table: entry (d, t) = origin shard of the buffer device
+    d holds at consume t (after the skew, if any, and t hops).
+
+    Generalizes ``collective_matmul._source_table`` beyond single-cycle
+    rings: any per-hop permutation sequence (GridSchedule) works, and the
+    skew permutation shifts the whole table's starting row.
+    """
+    n = sched.size
+    topos = hop_topos(sched)
+    assert len(topos) >= n - 1, (sched, len(topos))
+    origin = np.arange(n)
+    if isinstance(sched, GridSchedule) and sched.skew is not None:
+        dst = _perm_array(sched.skew)
+        moved = np.empty(n, np.int64)
+        moved[dst] = origin                 # receiver holds sender's shard
+        origin = moved
+    table = np.zeros((n, n), np.int32)
+    table[:, 0] = origin
+    for t in range(1, n):
+        dst = _perm_array(topos[t - 1])
+        table[dst, t] = table[np.arange(n), t - 1]
+    return table
+
+
+def dest_table(sched: AnySchedule) -> np.ndarray:
+    """[n, n] int32 table for reduce-scatter rings: entry (d, t) = the
+    device where an accumulator that is on device d at step t finally
+    lands after riding hops t..n-2 (step n-1 is the last compute; no hop
+    follows it). A traveling partial computed on device d at step t must
+    therefore be the chunk owned by ``dest_table[d, t]``.
+
+    For the +1 ring this reduces to (d + n - 1 - t) mod n — the classic
+    systolic pulse; for grid schedules it is the composition of the
+    remaining per-hop permutations.
+    """
+    n = sched.size
+    topos = hop_topos(sched)
+    table = np.zeros((n, n), np.int32)
+    table[:, n - 1] = np.arange(n)
+    for t in range(n - 2, -1, -1):
+        dst = _perm_array(topos[t])
+        table[:, t] = table[dst, t + 1]
+    return table
+
+
+def is_cycle(sched: AnySchedule) -> bool:
+    """True iff ``sched`` is a plain Topology forming one full n-cycle —
+    the shape ``stream_carry`` (decode) needs so elements return home."""
+    if not isinstance(sched, Topology):
+        return False
+    nxt = dict(sched.perm)
+    if len(nxt) != sched.size or set(nxt.values()) != set(range(sched.size)):
+        return False
+    seen, cur = 0, 0
+    for _ in range(sched.size):
+        cur = nxt[cur]
+        seen += 1
+        if cur == 0:
+            break
+    return cur == 0 and seen == sched.size
+
+
+# ---------------------------------------------------------------------------
+# name -> schedule resolution (config / autotune plan threading)
+# ---------------------------------------------------------------------------
+
+
+def default_fold(size: int) -> tuple[int, int]:
+    """Near-square RxC fold of a 1-D axis: the largest divisor pair with
+    rows <= cols (8 -> 2x4, 16 -> 4x4, 12 -> 3x4; primes fold 1xN)."""
+    rows = 1
+    r = 2
+    while r * r <= size:
+        if size % r == 0:
+            rows = r
+        r += 1
+    return rows, size // rows
+
+
+def grid_ok(size: int) -> bool:
+    """A 2-D fold needs >= 2 real rows and an even row count (so torus2d's
+    alternating sweep closes the cycle)."""
+    rows, _ = default_fold(size)
+    return rows >= 2 and rows % 2 == 0
+
+
+def resolve(name: str, axis: str, size: int) -> AnySchedule:
+    """Topology name (a config string or autotune Plan field) -> schedule.
+
+    Names: ``ring`` | ``snake_fold`` | ``torus2d`` | ``cannon_grid``,
+    optionally suffixed ``:RxC`` to pin the fold (default: near-square).
+    """
+    base, _, fold = name.partition(":")
+    if fold:
+        rows, cols = (int(v) for v in fold.split("x"))
+        assert rows * cols == size, (name, size)
+    else:
+        rows, cols = default_fold(size)
+    if base == "ring":
+        return ring(axis, size)
+    if base == "snake_fold":
+        return snake_fold(axis, rows, cols)
+    if base == "torus2d":
+        return torus2d(axis, rows, cols)
+    if base == "cannon_grid":
+        return cannon_grid(axis, rows, cols)
+    raise ValueError(f"unknown topology name: {name!r}")
+
+
+def resolve_safe(name: str, axis: str, size: int, *,
+                 cycle_only: bool = False) -> AnySchedule:
+    """:func:`resolve` with graceful fallback to the +1 ring when the named
+    schedule doesn't apply here — an odd/degenerate grid fold, an unknown
+    name from a stale cache entry, or a cycle-only caller (decode's
+    stream_carry) handed a grid schedule."""
+    if not name or name == "ring":
+        return ring(axis, size)
+    base = name.partition(":")[0]
+    if base in ("torus2d", "cannon_grid") and not grid_ok(size):
+        return ring(axis, size)
+    try:
+        sched = resolve(name, axis, size)
+    except (ValueError, AssertionError):
+        return ring(axis, size)
+    if cycle_only and not is_cycle(sched):
+        return ring(axis, size)
+    return sched

@@ -65,11 +65,35 @@ def init_gqa(key, cfg: ModelConfig, d_model: int | None = None):
 
 
 def _systolic_attn_ctx(cfg: ModelConfig):
-    """Mesh context when the paper's ring projections are enabled."""
-    if cfg.systolic_mode == "baseline":
+    """Mesh context when the paper's ring projections are enabled (or the
+    autotuner may enable them via a cached plan)."""
+    if cfg.systolic_mode == "baseline" and not cfg.autotune:
         return None
     from repro.models.common import current_ctx
     return current_ctx()
+
+
+def _tuned(cfg: ModelConfig, op: str, shape):
+    """Config.autotune gate: rewrite the systolic fields from a cached
+    measured plan for (op, shape) — cache-only, defaults stand on miss."""
+    if not cfg.autotune:
+        return cfg
+    from repro.models.common import current_ctx
+    ctx = current_ctx()
+    if ctx is None:
+        return cfg
+    from repro.autotune.api import tuned_cfg
+    return tuned_cfg(cfg, op, shape, ctx.mesh)
+
+
+def _sched(cfg: ModelConfig, mesh, *, cycle_only: bool = False):
+    """cfg.systolic_topology -> schedule over the 'model' axis (None keeps
+    the callee's default +1 ring)."""
+    if cfg.systolic_topology in ("", "ring"):
+        return None
+    from repro.core import topology as topo_lib
+    return topo_lib.resolve_safe(cfg.systolic_topology, "model",
+                                 mesh.shape["model"], cycle_only=cycle_only)
 
 
 def _qkv(params, x, cfg: ModelConfig, positions):
@@ -77,7 +101,7 @@ def _qkv(params, x, cfg: ModelConfig, positions):
     x = x.astype(dt)
     ctx = _systolic_attn_ctx(cfg)
     done = False
-    if ctx is not None and x.ndim == 3:
+    if ctx is not None and cfg.systolic_mode != "baseline" and x.ndim == 3:
         from repro.core import collective_matmul as cm
         if cm.attn_applicable(x, cfg.num_heads, cfg.num_kv_heads,
                               cfg.resolved_head_dim, ctx.mesh):
@@ -85,7 +109,8 @@ def _qkv(params, x, cfg: ModelConfig, positions):
             q, k, v = cm.systolic_qkv(
                 x, params["wq"].astype(dt), params["wk"].astype(dt),
                 params["wv"].astype(dt), ctx.mesh, cfg.systolic_mode,
-                use_kernel=cfg.use_kernel)
+                use_kernel=cfg.use_kernel, topo=_sched(cfg, ctx.mesh),
+                block=cfg.kernel_block)
             done = True
     if not done:
         q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
@@ -198,20 +223,23 @@ def blocked_attention(q, k, v, *, causal: bool, window: int = 0,
 def gqa_forward(params, x, cfg: ModelConfig, positions=None, return_kv=False):
     """Full-sequence causal attention (train / prefill). x: [B,S,D]."""
     b, s, _ = x.shape
+    cfg = _tuned(cfg, "attention", x.shape)
     if positions is None:
         positions = jnp.arange(s)[None, :].astype(jnp.int32)
     q, k, v = _qkv(params, x, cfg, positions)
     out = None
     used_ring = False
     ctx = _systolic_attn_ctx(cfg)
-    if ctx is not None:
+    if ctx is not None and cfg.systolic_mode != "baseline":
         from repro.core import ring_attention as ra
         if ra.ring_attn_applicable(q, k, ctx.mesh):
             # the paper's streamed-operand schedule on the attention core:
             # q shards stay resident, K/V blocks ride the 'model' ring
+            # (or the tuned 2-D grid schedule)
             out = ra.systolic_ring_attention(
                 q, k, v, ctx.mesh, cfg.systolic_mode, causal=True,
-                window=cfg.sliding_window, use_kernel=cfg.use_kernel)
+                window=cfg.sliding_window, use_kernel=cfg.use_kernel,
+                topo=_sched(cfg, ctx.mesh))
             used_ring = True
     if out is None:
         if s >= BLOCKED_ATTN_THRESHOLD:
@@ -226,13 +254,16 @@ def gqa_forward(params, x, cfg: ModelConfig, positions=None, return_kv=False):
     # out-projection is local to each shard (wo is the resident multicast
     # operand) — the head-sharded RS ring would only add a reshard
     if (not used_ring and ctx is not None
+            and cfg.systolic_mode != "baseline"
             and cfg.num_heads % max(sizes.get("model", 1), 1) == 0
             and sizes.get("model", 0) > 1 and s % sizes["model"] == 0):
         from repro.core import collective_matmul as cm
         # reduce-scatter ring: head-shard partials travel to seq owners
         y = cm.systolic_out_proj(out, params["wo"].astype(adtype(cfg)),
                                  ctx.mesh, cfg.systolic_mode,
-                                 use_kernel=cfg.use_kernel)
+                                 use_kernel=cfg.use_kernel,
+                                 topo=_sched(cfg, ctx.mesh),
+                                 block=cfg.kernel_block)
     else:
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(adtype(cfg)))
         # reduce-scatter (not all-reduce) into the sequence-parallel layout
@@ -278,6 +309,7 @@ def gqa_decode(params, x, cache, cfg: ModelConfig, active=None):
     online-softmax state. Returns (y [B,1,D], new cache)."""
     pos = cache["pos"]                                       # [B]
     b = x.shape[0]
+    cfg = _tuned(cfg, "decode", x.shape)
     q, k, v = _qkv(params, x, cfg, pos[:, None].astype(jnp.int32))
     s_cache = cache["k"].shape[1]
     write_idx = jnp.mod(pos, s_cache) if cfg.sliding_window else \
@@ -292,12 +324,14 @@ def gqa_decode(params, x, cache, cfg: ModelConfig, active=None):
 
     out = None
     ctx = _systolic_attn_ctx(cfg)
-    if ctx is not None and not cfg.sliding_window:
+    if ctx is not None and cfg.systolic_mode != "baseline" \
+            and not cfg.sliding_window:
         from repro.core import ring_attention as ra
         if ra.ring_decode_applicable(q, k_all, ctx.mesh):
-            out = ra.systolic_ring_decode(q, k_all, v_all, pos, ctx.mesh,
-                                          cfg.systolic_mode,
-                                          use_kernel=cfg.use_kernel)
+            out = ra.systolic_ring_decode(
+                q, k_all, v_all, pos, ctx.mesh, cfg.systolic_mode,
+                use_kernel=cfg.use_kernel,
+                topo=_sched(cfg, ctx.mesh, cycle_only=True))
     if out is None:
         slot = jnp.arange(s_cache)
         pos_c = pos[:, None]                                 # [B,1]

@@ -135,6 +135,20 @@ def _ring_moe_mesh(cfg: ModelConfig, x):
     return ctx.mesh if ring_moe_applicable(cfg, x, ctx.mesh) else None
 
 
+def _tuned_moe(cfg: ModelConfig, x):
+    """Config.autotune gate for the MoE op (cache-only, see models/attention
+    ._tuned): a cached plan may flip the systolic fields before the mesh
+    gate below decides between the dense and expert-ring paths."""
+    if not cfg.autotune:
+        return cfg
+    from repro.models.common import current_ctx
+    ctx = current_ctx()
+    if ctx is None:
+        return cfg
+    from repro.autotune.api import tuned_cfg
+    return tuned_cfg(cfg, "moe", x.shape, ctx.mesh)
+
+
 def apply_moe(params, x, cfg: ModelConfig):
     """x: [B,S,D] -> (y [B,S,D], aux_loss scalar)."""
     dt = adtype(cfg)
@@ -146,6 +160,7 @@ def apply_moe(params, x, cfg: ModelConfig):
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
     weights, idx, aux = _topk_routing(logits, cfg)
 
+    cfg = _tuned_moe(cfg, x)
     ring_mesh = _ring_moe_mesh(cfg, x)
     if ring_mesh is not None:
         # the paper's streamed-operand schedule on MoE dispatch: expert
@@ -153,11 +168,17 @@ def apply_moe(params, x, cfg: ModelConfig):
         # 'model' ring (core/ring_moe; capacity math shared with the dense
         # path below via _positions_in_expert)
         from repro.core.ring_moe import systolic_ring_moe
+        from repro.core import topology as topo_lib
         pos = _positions_in_expert(idx, e)
+        topo = None
+        if cfg.systolic_topology not in ("", "ring"):
+            topo = topo_lib.resolve_safe(cfg.systolic_topology, "model",
+                                         ring_mesh.shape["model"])
         y = systolic_ring_moe(
             x.astype(dt), idx, pos, weights,
             params["w_gate"].astype(dt), params["w_up"].astype(dt),
-            params["w_down"].astype(dt), cap, ring_mesh, cfg.systolic_mode)
+            params["w_down"].astype(dt), cap, ring_mesh, cfg.systolic_mode,
+            topo=topo, use_kernel=cfg.use_kernel, block=cfg.kernel_block)
         y = y.astype(dt)
         seq_ax = "seq_sp" if cfg.sequence_parallel else "seq"
         return shard(y, "batch", seq_ax, "embed"), aux * cfg.router_aux_loss

@@ -53,7 +53,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig, ServeConfig
-from repro.core import faults, queues
+from repro.core import faults, queues, topology
 from repro.obs import linkstats
 from repro.core.topology import ring
 from repro.models import build_model
@@ -184,17 +184,29 @@ class RingShardedBackend(DecodeBackend):
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
                  mesh: Mesh, mode: str = "qlr", param_axes=None,
-                 checked: bool = False, telemetry: bool = False):
+                 checked: bool = False, telemetry: bool = False,
+                 plan=None):
+        """``plan`` (an ``autotune.Plan``) threads a measured tuning plan
+        into the backend: it overrides ``mode`` and rewrites the config's
+        systolic fields (topology / kernel / block) before compilation —
+        the serving end of the Config.autotune path."""
+        if plan is not None:
+            mode = plan.mode
         self.mesh = mesh
         self.mode = mode
+        self.plan = plan
         self.param_axes = param_axes
         self.checked = checked
         self.telemetry = telemetry
         self.telemetry_on = telemetry
         self._stats_total: dict = {}
-        self.name = f"ring-{mode}" + ("+checked" if checked else "")
+        self.name = f"ring-{mode}" + ("+checked" if checked else "") \
+            + ("+tuned" if plan is not None else "")
         self.last_health: dict = {}
         cfg = replace(cfg, systolic_mode=mode)
+        if plan is not None:
+            from repro.autotune.api import apply_plan
+            cfg = apply_plan(cfg, plan)
         super().__init__(cfg, scfg, params)
         self._probe = jax.jit(self._make_probe()) \
             if checked and mode in queues.MODES else None
@@ -298,7 +310,11 @@ class RingShardedBackend(DecodeBackend):
         stream hops through — trips a sidecar check here."""
         mesh, mode = self.mesh, self.mode
         n = mesh.shape["model"]
-        topo = ring("model", n)
+        # the canary rides the same schedule the decode stream hops (tuned
+        # topologies re-point it too); grids fall back to the ring the
+        # decode dual actually uses
+        topo = topology.resolve_safe(self.cfg.systolic_topology, "model", n,
+                                     cycle_only=True)
         payload = (jnp.arange(n * 4, dtype=jnp.float32).reshape(n, 4) + 1.0)
 
         def local(x_l):

@@ -1,0 +1,191 @@
+"""Autotuner unit tests — the search space gates, the cache ladder, the
+zero-remeasure guarantee, and the config threading (single device; the
+measured end-to-end sweep lives in benchmarks/bench_autotune.py and the
+multidev checks)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.autotune import (
+    Plan,
+    apply_plan,
+    best_plan,
+    candidates,
+    make_key,
+    tune,
+    tuned_cfg,
+)
+from repro.autotune import measure
+from repro.autotune.cache import TuneCache
+from repro.autotune.space import CYCLE_TOPOLOGIES, DEFAULT_PLAN, TOPOLOGIES
+from repro.configs.base import ModelConfig
+
+
+class FakeMesh:
+    """mesh_key/tune only touch axis_names and devices.shape."""
+
+    def __init__(self, axes=("model",), shape=(8,)):
+        self.axis_names = axes
+        import numpy as np
+        self.devices = np.zeros(shape)
+
+
+MESH = FakeMesh()
+MK = (("model", 8),)
+
+
+# --------------------------------------------------------------- space gates
+def test_candidates_gates_baseline_to_ring():
+    plans = candidates("attention", 8)
+    assert DEFAULT_PLAN in plans
+    for p in plans:
+        if p.mode == "baseline":
+            assert p.topology == "ring"
+        if not p.use_kernel:
+            assert p.block == 0
+
+
+def test_candidates_gates_grids_on_fold():
+    # 7 devices fold 1x7: no valid even grid, so no torus2d/cannon_grid
+    topos = {p.topology for p in candidates("matmul", 7)}
+    assert topos == {"ring", "snake_fold"}
+    topos8 = {p.topology for p in candidates("matmul", 8)}
+    assert topos8 == set(TOPOLOGIES)
+
+
+def test_candidates_cycle_ops_never_ride_grids():
+    for op in ("moe", "decode", "serve"):
+        topos = {p.topology for p in candidates(op, 8)}
+        assert topos <= set(CYCLE_TOPOLOGIES), op
+
+
+def test_candidates_blocks_require_kernel():
+    plans = candidates("matmul", 8, blocks=(0, 64), kernels=(False, True))
+    assert any(p.block == 64 and p.use_kernel for p in plans)
+    assert not any(p.block and not p.use_kernel for p in plans)
+    # no duplicate plans from the block/kernel cross product
+    assert len(plans) == len(set(plans))
+
+
+def test_plan_round_trips_through_dict():
+    p = Plan(mode="qlr", topology="cannon_grid", block=64, use_kernel=True)
+    assert Plan.from_dict(p.to_dict()) == p
+
+
+# --------------------------------------------------------------- cache ladder
+def test_cache_exact_then_nearest_then_miss(tmp_path):
+    c = TuneCache(str(tmp_path / "c.json"))
+    p_small = Plan(mode="qlr", topology="snake_fold")
+    p_big = Plan(mode="xqueue", topology="torus2d")
+    c.put("attention", (2, 128, 64), "float32", MK, p_small, us=10.0)
+    c.put("attention", (2, 4096, 64), "float32", MK, p_big, us=99.0)
+
+    assert c.lookup("attention", (2, 128, 64), "float32", MK) == p_small
+    # nearest in log2 space: 256 is one doubling from 128, four from 4096
+    assert c.lookup("attention", (2, 256, 64), "float32", MK) == p_small
+    assert c.lookup("attention", (2, 2048, 64), "float32", MK) == p_big
+    # rank mismatch never borrows ([M,K] weight vs [B,S,D] activation)
+    assert c.lookup("attention", (128, 64), "float32", MK) is None
+    # other op / dtype / mesh: miss
+    assert c.lookup("moe", (2, 128, 64), "float32", MK) is None
+    assert c.lookup("attention", (2, 128, 64), "bfloat16", MK) is None
+    assert c.lookup("attention", (2, 128, 64), "float32",
+                    (("model", 4),)) is None
+
+
+def test_cache_persists_round_trip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    c = TuneCache(path)
+    plan = Plan(mode="sw", topology="torus2d", block=64, use_kernel=True)
+    c.put("matmul", (2, 128, 64), "float32", MK, plan, us=42.0, bytes=7.0)
+    c.save()
+
+    c2 = TuneCache(path)
+    assert len(c2) == 1
+    assert c2.get_exact("matmul", (2, 128, 64), "float32", MK) == plan
+    key = make_key("matmul", (2, 128, 64), "float32", MK)
+    assert key == "matmul|2x128x64|float32|model=8"
+    assert c2.entries[key]["us"] == 42.0
+
+
+# ------------------------------------------------- tune + zero re-measurement
+def _toy_build(plan: Plan):
+    x = jnp.arange(8.0)
+    if plan.mode == "sw":                       # one deliberately bad plan
+        return lambda v: jnp.tanh(v @ jnp.outer(v, v)).sum(), (x,)
+    return lambda v: (v * 2.0).sum(), (x,)
+
+
+def test_tune_persists_winner_and_exact_hit_runs_no_trials(tmp_path):
+    cache = TuneCache(str(tmp_path / "c.json"))
+    plans = [Plan(mode="qlr"), Plan(mode="sw"), Plan(mode="baseline")]
+    measure.reset_trials()
+    winner, results = tune("matmul", (8,), "float32", MESH, _toy_build,
+                           cache=cache, plans=plans, iters=1)
+    assert measure.trial_count() == len(plans)
+    assert winner in plans
+    assert set(results) == {p.label() for p in plans}
+    assert len(cache) == 1
+
+    measure.reset_trials()
+    again = best_plan("matmul", (8,), "float32", MESH, cache=cache)
+    assert again == winner
+    assert measure.trial_count() == 0           # answered from the cache
+
+    # nearest-shape hits are also measurement-free
+    measure.reset_trials()
+    near = best_plan("matmul", (16,), "float32", MESH, cache=cache)
+    assert near == winner
+    assert measure.trial_count() == 0
+
+
+def test_best_plan_total_miss_returns_none(tmp_path):
+    cache = TuneCache(str(tmp_path / "c.json"))
+    assert best_plan("moe", (8,), "float32", MESH, cache=cache) is None
+
+
+def test_tune_ranks_failing_plan_last(tmp_path):
+    cache = TuneCache(str(tmp_path / "c.json"))
+
+    def build(plan):
+        if plan.mode == "xqueue":
+            raise RuntimeError("inapplicable")
+        return lambda v: v + 1.0, (jnp.ones(4),)
+
+    winner, results = tune("matmul", (4,), "float32", MESH, cache=cache,
+                           build=build,
+                           plans=[Plan(mode="qlr"), Plan(mode="xqueue")],
+                           iters=1)
+    assert winner.mode == "qlr"
+    assert results[Plan(mode="xqueue").label()]["us"] == float("inf")
+
+
+# ------------------------------------------------------------ config threading
+def test_apply_plan_rewrites_the_four_fields():
+    cfg = ModelConfig(name="t", family="dense")
+    plan = Plan(mode="xqueue", topology="torus2d", block=128, use_kernel=True)
+    out = apply_plan(cfg, plan)
+    assert out.systolic_mode == "xqueue"
+    assert out.systolic_topology == "torus2d"
+    assert out.kernel_block == 128
+    assert out.use_kernel is True
+    assert cfg.systolic_mode == "baseline"      # original untouched
+
+
+def test_tuned_cfg_cache_hit_and_miss(tmp_path):
+    from repro.autotune import api
+    cache = api.set_cache_path(str(tmp_path / "c.json"))
+    cfg = ModelConfig(name="t", family="dense", autotune=True)
+    mesh = FakeMesh()
+    # miss: defaults stand
+    assert tuned_cfg(cfg, "attention", (2, 128, 64), mesh) == cfg
+    # hit: the cached plan's fields are applied
+    plan = Plan(mode="qlr", topology="snake_fold")
+    cache.put("attention", (2, 128, 64), cfg.dtype, api.mesh_key(mesh), plan)
+    out = tuned_cfg(cfg, "attention", (2, 128, 64), mesh)
+    assert out.systolic_mode == "qlr"
+    assert out.systolic_topology == "snake_fold"
+    # gate off: no lookup at all
+    cfg_off = ModelConfig(name="t", family="dense", autotune=False)
+    assert tuned_cfg(cfg_off, "attention", (2, 128, 64), mesh) == cfg_off
+    api.set_cache_path(None)                    # restore the global default

@@ -102,6 +102,26 @@ def test_ring_moe_multidev():
     assert results["ring_moe_gate"]["ok"]
 
 
+def test_topologies2d_multidev():
+    """2-D schedules (snake_fold / torus2d / cannon_grid) match the dense
+    oracles in every link mode — attention values+grads, AG/RS collective
+    matmuls, MoE expert placement, cycle-only decode — plus the one-hop
+    Cannon grid skew vs the masked rotation."""
+    results = run_check("check_topologies2d.py")
+    for topo in ("snake_fold", "torus2d", "cannon_grid"):
+        for mode in ("sw", "xqueue", "qlr"):
+            assert results[f"attn_{topo}_{mode}"]["ok"]
+            assert results[f"agmm_{topo}_{mode}"]["ok"]
+            assert results[f"rsmm_{topo}_{mode}"]["ok"]
+        assert results[f"attn_grad_{topo}"]["ok"]
+    assert results["agmm_grad_cannon_grid"]["ok"]
+    for mode in ("sw", "xqueue", "qlr"):
+        assert results[f"moe_snake_fold_{mode}"]["ok"]
+        assert results[f"decode_snake_fold_{mode}"]["ok"]
+        assert results[f"cannon_grid_skew_{mode}"]["ok"]
+    assert results["grid_decode_raises"]["ok"]
+
+
 def test_systolic_model_parity_multidev():
     """Ring FFN + ring attention projections == baseline (loss & grads)."""
     results = run_check("check_systolic_model.py")

@@ -21,7 +21,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import queues
-from repro.core.topology import chains, ring, snake_ring, torus_shift
+from repro.core.topology import (
+    cannon_grid,
+    cannon_skew,
+    chains,
+    ring,
+    resolve,
+    snake_fold,
+    snake_ring,
+    source_table,
+    torus2d,
+    torus_shift,
+)
 
 SETTINGS = dict(deadline=None, max_examples=20)
 
@@ -111,6 +122,91 @@ def test_neighbors_and_sources_match_perm(size, kind):
         for i in range(size):
             assert len(t.neighbors_of(i)) == 1
         assert t.sources == set(range(size))
+
+
+# --- 2-D schedules: folds, skews, grid coverage -----------------------------
+def _compose(perms) -> np.ndarray:
+    """dst-of-origin array for a sequence of Topology perms (applied in
+    order): out[i] = where node i's element sits after all hops."""
+    n = perms[0].size
+    loc = np.arange(n)
+    for t in perms:
+        dst = np.arange(n)
+        for s, d in t.perm:
+            dst[s] = d
+        loc = dst[loc]
+    return loc
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([2, 4]), cols=st.sampled_from([2, 3, 4, 8]),
+       name=st.sampled_from(["snake_fold", "torus2d", "cannon_grid"]))
+def test_every_schedule_perm_is_bijective(rows, cols, name):
+    """Every permutation a resolved schedule can ride — each hop and the
+    skew — is a bijection over the full RxC axis."""
+    sched = resolve(f"{name}:{rows}x{cols}", "pe", rows * cols)
+    size = rows * cols
+    perms = list(sched.hops) + [sched.skew] if hasattr(sched, "hops") \
+        else [sched]
+    for t in perms:
+        if t is None:                        # torus2d has no skew
+            continue
+        assert sorted(s for s, _ in t.perm) == list(range(size)), t.name
+        assert sorted(d for _, d in t.perm) == list(range(size)), t.name
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([2, 3, 4]), cols=st.sampled_from([2, 4, 8]))
+def test_torus2d_row_col_shifts_commute(rows, cols):
+    """The constituent row/col shifts of a 2-D fold act on disjoint grid
+    coordinates, so composing them is order-independent — the property
+    that lets torus2d interleave row sweeps and down-steps freely."""
+    right = torus_shift("pe", rows, cols, direction="right")
+    down = torus_shift("pe", rows, cols, direction="down")
+    np.testing.assert_array_equal(_compose([right, down]),
+                                  _compose([down, right]))
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([2, 3, 4]), cols=st.sampled_from([2, 4, 8]))
+def test_snake_fold_visits_all_rxc_once(rows, cols):
+    """snake_fold is one full cycle: size hops from any start return home
+    having visited every device of the RxC fold exactly once."""
+    t = snake_fold("pe", rows, cols)
+    size = rows * cols
+    walk = _follow(t.perm, 0, size)
+    assert walk[-1] == 0
+    assert sorted(walk[:-1]) == list(range(size))
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([2, 3, 4]), cols=st.sampled_from([2, 4, 8]),
+       which=st.sampled_from(["rows", "cols"]))
+def test_cannon_skew_round_trips(rows, cols, which):
+    """The Cannon start skew is a per-row (per-col) cyclic shift: C (resp.
+    R) applications compose to the identity."""
+    t = cannon_skew("pe", rows, cols, which=which)
+    period = cols if which == "rows" else rows
+    size = rows * cols
+    np.testing.assert_array_equal(_compose([t] * period), np.arange(size))
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([2, 4]), cols=st.sampled_from([2, 4, 8]),
+       name=st.sampled_from(["torus2d", "cannon_grid"]))
+def test_grid_schedule_full_coverage_and_home(rows, cols, name):
+    """Over the n consumes of a grid schedule every device sees every
+    origin shard exactly once (source_table rows are permutations), and
+    with an even row count the composed hop sequence is the identity —
+    after the sweep a buffer sits exactly where the start skew (if any)
+    put it."""
+    sched = resolve(f"{name}:{rows}x{cols}", "pe", rows * cols)
+    size = rows * cols
+    table = source_table(sched)
+    for d in range(size):
+        assert sorted(table[d]) == list(range(size)), (name, d)
+    np.testing.assert_array_equal(_compose(list(sched.hops)),
+                                  np.arange(size))
 
 
 # --- queues.stream: mode equivalence + ring return --------------------------
